@@ -1,0 +1,33 @@
+"""Eq. 9: Lambert-W minimal bandwidth — accuracy vs the bisection oracle
+and per-call latency (it runs once per device per round in Algorithm 3)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core.bandwidth import (min_bandwidth, min_bandwidth_bisect)
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    sh = 10 ** rng.uniform(-13, -8, size=64)
+    N0 = 10 ** ((-174 + 6) / 10) * 1e-3
+    bits, dl = 1e7, 2.0
+
+    _, us_vec = timed(min_bandwidth, bits, dl, sh, N0, repeats=20)
+    bw = min_bandwidth(bits, dl, sh, N0)
+    errs = []
+    t0 = time.perf_counter()
+    for s, b in zip(sh, bw):
+        ref = min_bandwidth_bisect(bits, dl, s, N0)
+        if ref > 0:
+            errs.append(abs(b - ref) / ref)
+    us_bisect = (time.perf_counter() - t0) / len(sh) * 1e6
+    rows.append(row("eq9/lambertw_64dev", us_vec, f"max_err={max(errs):.2e}"))
+    rows.append(row("eq9/bisect_per_dev", us_bisect, "oracle"))
+    rows.append(row("eq9/feasible_frac", us_vec,
+                    f"{(bw > 0).mean():.2f}"))
+    return rows

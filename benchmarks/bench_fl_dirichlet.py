@@ -1,0 +1,38 @@
+"""Fig. 7/8: behaviour across Dirichlet alpha — scheduled-device count
+(FedCGD schedules more devices as data homogenizes) and epochs-to-target.
+The scheduled-count figure (Fig. 8) needs no training, so it runs at the
+paper's full V=64 with the real channel."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import scheduling as S
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    V, C = 64, 10
+    for alpha in (0.1, 1.0, 10.0):
+        counts, wemds, uss = [], [], []
+        for _ in range(10):
+            p_dev = rng.dirichlet(np.ones(C) * alpha, size=V)
+            avail = rng.random(V) < 0.3            # paper p_a = 0.3
+            idx = np.flatnonzero(avail)
+            prob = S.Problem(
+                p_dev=p_dev[idx], global_dist=np.ones(C) / C,
+                class_weights=np.ones(C), sigma=1.0, batch_size=32,
+                min_bw=rng.uniform(0.5e6, 3e6, len(idx)), total_bw=20e6)
+            t0 = time.perf_counter()
+            sched = S.fscd(prob)
+            uss.append((time.perf_counter() - t0) * 1e6)
+            counts.append(sched.num_scheduled)
+            wemds.append(sched.wemd)
+        rows.append(row(f"fig8/sched_num/alpha{alpha}", np.mean(uss),
+                        f"{np.mean(counts):.1f}"))
+        rows.append(row(f"fig8/wemd/alpha{alpha}", np.mean(uss),
+                        f"{np.mean(wemds):.3f}"))
+    return rows

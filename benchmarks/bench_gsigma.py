@@ -1,0 +1,30 @@
+"""Fig. 9: evolution of the estimated G and sigma during training —
+G/sigma is the paper's indicator of when device-level CGD matters."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import mini_fl_world, row
+from repro.fl import FederatedTrainer, FLConfig
+
+
+def run() -> list:
+    rows = []
+    for tau in (1, 3):
+        model, train, test, parts = mini_fl_world(partition="sort", l=2,
+                                                  V=12, seed=4)
+        fl = FLConfig(num_devices=12, available_prob=0.8, batch_size=8,
+                      tau=tau, scheduler="fedcgd-fscd", eval_every=0, seed=4)
+        tr = FederatedTrainer(model, train, test, parts, fl)
+        t0 = time.perf_counter()
+        hist = tr.run(10)
+        us = (time.perf_counter() - t0) / 10 * 1e6
+        g0, g1 = hist[0]["g_hat"], hist[-1]["g_hat"]
+        s0, s1 = hist[0]["sigma_hat"], hist[-1]["sigma_hat"]
+        rows.append(row(f"fig9/G/tau{tau}", us, f"{g0:.3f}->{g1:.3f}"))
+        rows.append(row(f"fig9/sigma/tau{tau}", us, f"{s0:.3f}->{s1:.3f}"))
+        rows.append(row(f"fig9/G_over_sigma/tau{tau}", us,
+                        f"{g1 / max(s1, 1e-9):.3f}"))
+    return rows

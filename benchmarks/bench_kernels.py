@@ -1,0 +1,59 @@
+"""Pallas-kernel microbench: interpret-mode correctness-path timings
+(CPU container; wall-times are NOT TPU perf — the roofline table in
+EXPERIMENTS.md carries the perf story) + allclose deltas vs oracles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.persample_gradnorm import persample_gradnorm_pallas
+from repro.kernels.rglru_scan import rglru_pallas
+from repro.kernels.rwkv_scan import wkv_pallas
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    out, us = timed(lambda: jax.block_until_ready(
+        flash_attention(q, q, q, causal=True, interpret=True)), repeats=2)
+    expect = ref.attention_ref(q, q, q, causal=True)
+    rows.append(row("kernel/flash_attn/256x64", us,
+                    f"maxerr={float(jnp.abs(out - expect).max()):.1e}"))
+
+    B, T, H, hd = 1, 128, 2, 64
+    r = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    k = r * 0.3
+    v = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    w = jnp.asarray(jax.nn.sigmoid(rng.normal(size=(B, T, H, hd))) * 0.5
+                    + 0.45, jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, hd)) * 0.1, jnp.float32)
+    (y, s), us = timed(lambda: jax.block_until_ready(
+        wkv_pallas(r, k, v, w, u, interpret=True)), repeats=2)
+    yr, _ = ref.wkv_ref(r, k, v, w, u)
+    rows.append(row("kernel/wkv/128x2x64", us,
+                    f"maxerr={float(jnp.abs(y - yr).max()):.1e}"))
+
+    a = jnp.asarray(rng.uniform(0.9, 0.999, (2, 256, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, 256, 256)), jnp.float32)
+    h0 = jnp.zeros((2, 256), jnp.float32)
+    (y, hT), us = timed(lambda: jax.block_until_ready(
+        rglru_pallas(a, b, h0, interpret=True)), repeats=2)
+    yr, _ = ref.rglru_ref(a, b, h0)
+    rows.append(row("kernel/rglru/256x256", us,
+                    f"maxerr={float(jnp.abs(y - yr).max()):.1e}"))
+
+    h = jnp.asarray(rng.normal(size=(128, 120)), jnp.float32)
+    lg = jnp.asarray(rng.normal(size=(128, 10)), jnp.float32)
+    yl = jnp.asarray(rng.integers(0, 10, 128), jnp.int32)
+    (sig, _), us = timed(lambda: jax.block_until_ready(
+        persample_gradnorm_pallas(h, lg, yl, interpret=True)), repeats=2)
+    sr, _ = ref.persample_gradnorm_ref(h, lg, yl)
+    rows.append(row("kernel/psg/128x120x10", us,
+                    f"err={abs(float(sig - sr)):.1e}"))
+    return rows

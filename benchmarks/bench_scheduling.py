@@ -1,0 +1,54 @@
+"""Fig. 3: scheduling-solver quality — relative error + iteration counts
+of GS and FSCD against the CD baseline (and the exact optimum for small
+V)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import scheduling as S
+
+
+def make_problem(rng, V, C=10):
+    # calibrated to the paper's mid-training magnitudes: sigma-hat ~ 2-6
+    # (Fig. 9), G-hat ~ O(1), b = 32
+    p_dev = rng.dirichlet(np.ones(C) * 0.4, size=V)
+    return S.Problem(
+        p_dev=p_dev, global_dist=rng.dirichlet(np.ones(C) * 3.0),
+        class_weights=rng.uniform(0.5, 1.5, C), sigma=rng.uniform(2.0, 6.0),
+        batch_size=32, min_bw=rng.uniform(0.4, 1.6, V), total_bw=V * 0.5)
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    for V in (8, 16, 32, 64):
+        trials = 12 if V <= 16 else 8
+        errs = {"GS": [], "FSCD": []}
+        iters = {"GS": [], "FSCD": [], "CD": []}
+        uss = {"GS": [], "FSCD": [], "CD": []}
+        for _ in range(trials):
+            prob = make_problem(rng, V)
+            cd, us_cd = timed(S.coordinate_descent, prob, repeats=1)
+            baseline = cd.objective
+            if V <= 16:
+                baseline = min(baseline, S.exhaustive(prob).objective)
+            gs, us_gs = timed(S.greedy_scheduling, prob, repeats=1)
+            fs, us_fs = timed(S.fscd, prob, repeats=1)
+            errs["GS"].append(gs.objective / baseline - 1)
+            errs["FSCD"].append(fs.objective / baseline - 1)
+            iters["GS"].append(gs.iterations)
+            iters["FSCD"].append(fs.iterations)
+            iters["CD"].append(cd.iterations)
+            uss["GS"].append(us_gs)
+            uss["FSCD"].append(us_fs)
+            uss["CD"].append(us_cd)
+        for alg in ("GS", "FSCD"):
+            rows.append(row(
+                f"fig3/rel_err/{alg}/V{V}", np.mean(uss[alg]),
+                f"{np.mean(errs[alg]) * 100:.2f}%"))
+        for alg in ("GS", "FSCD", "CD"):
+            rows.append(row(
+                f"fig3/iterations/{alg}/V{V}", np.mean(uss[alg]),
+                f"{np.mean(iters[alg]):.1f}"))
+    return rows

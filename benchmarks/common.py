@@ -1,0 +1,54 @@
+"""Shared benchmark scaffolding. Every benchmark prints CSV rows
+``name,us_per_call,derived`` (derived = the paper-figure quantity)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """(result, us_per_call)."""
+    fn(*args, **kw)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def mini_fl_world(num_classes=4, per_class=100, image_size=16, noise=0.5,
+                  seed=0, V=12, partition="sort", l=1, alpha=0.5, r=1.0):
+    """A small synthetic FL world shared by the Fig.4/5/7/8/9 analogues."""
+    import dataclasses as dc
+    from repro.configs.paper_cnn import PAPER_CNN_CIFAR10
+    from repro.data import (apply_imbalance, dirichlet_partition,
+                            sort_and_partition, synthetic_image_dataset,
+                            train_test_split)
+    from repro.models import build_model
+
+    ds = synthetic_image_dataset(num_classes=num_classes,
+                                 num_per_class=per_class,
+                                 image_size=image_size, noise=noise,
+                                 seed=seed)
+    train, test = train_test_split(ds, seed=seed)
+    rng = np.random.default_rng(seed)
+    labels = train.labels
+    if r != 1.0:
+        idx = apply_imbalance(labels, r, rng)
+        train = dc.replace(train, inputs=train.inputs[idx],
+                           labels=labels[idx]) if dc.is_dataclass(train) else train
+        labels = train.labels
+    if partition == "sort":
+        parts = sort_and_partition(labels, V, l, rng)
+    else:
+        parts = dirichlet_partition(labels, V, alpha, rng)
+    cfg = dc.replace(PAPER_CNN_CIFAR10.reduced(), num_classes=num_classes)
+    model = build_model(cfg)
+    return model, train, test, parts

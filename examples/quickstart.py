@@ -1,0 +1,33 @@
+"""Quickstart: one FedCGD round, end to end, in ~30 lines of user code.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.paper_cnn import PAPER_CNN_CIFAR10
+from repro.data import (sort_and_partition, synthetic_image_dataset,
+                        train_test_split)
+from repro.fl import FederatedTrainer, FLConfig
+from repro.models import build_model
+
+# 1. a synthetic CIFAR-like dataset, sorted-and-partitioned over 16 devices
+ds = synthetic_image_dataset(num_classes=10, num_per_class=60, image_size=16)
+train, test = train_test_split(ds)
+rng = np.random.default_rng(0)
+device_data = sort_and_partition(train.labels, 16, 1, rng)
+
+# 2. the paper's CNN (reduced for CPU) + the FedCGD trainer
+model = build_model(PAPER_CNN_CIFAR10.reduced())
+fl = FLConfig(num_devices=16, available_prob=0.5, batch_size=16,
+              scheduler="fedcgd-fscd", eval_every=1)
+trainer = FederatedTrainer(model, train, test, device_data, fl)
+
+# 3. run rounds: each round draws the wireless channel, runs local SGD on
+#    every available device, solves P1 (WEMD + sampling variance, Lambert-W
+#    bandwidth feasible) and aggregates only the scheduled uploads
+for j in range(3):
+    rec = trainer.run_round(j)
+    print(f"round {j}: available={rec['num_available']} "
+          f"scheduled={rec['num_scheduled']} wemd={rec['wemd']:.3f} "
+          f"sampling_var={rec['sampling_variance']:.3f} "
+          f"acc={rec.get('test_accuracy', float('nan')):.3f}")

@@ -1,0 +1,46 @@
+"""Flat-npz pytree checkpointing.
+
+Sharded arrays are gathered to host before saving (fine for the FL-scale
+models trained in this container; the big dry-run configs are never
+materialized, so they are never checkpointed).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of `like`."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pathspec, leaf in flat_like:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in pathspec)
+        arr = data[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

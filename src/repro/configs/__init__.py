@@ -1,0 +1,55 @@
+"""Config registry: ``--arch <id>`` resolution for every assigned
+architecture plus the paper's own models."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, TrainConfig  # noqa: F401
+from repro.configs.paper_cnn import (  # noqa: F401
+    PAPER_CNN_CIFAR10,
+    RESNET18_GN_CIFAR100,
+    CNNConfig,
+)
+
+from repro.configs.gemma3_27b import CONFIG as GEMMA3_27B
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as MOONSHOT_V1_16B_A3B
+from repro.configs.rwkv6_3b import CONFIG as RWKV6_3B
+from repro.configs.qwen2_7b import CONFIG as QWEN2_7B
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as QWEN3_MOE_235B_A22B
+from repro.configs.yi_34b import CONFIG as YI_34B
+from repro.configs.arctic_480b import CONFIG as ARCTIC_480B
+from repro.configs.recurrentgemma_2b import CONFIG as RECURRENTGEMMA_2B
+from repro.configs.musicgen_large import CONFIG as MUSICGEN_LARGE
+from repro.configs.llama32_vision_11b import CONFIG as LLAMA32_VISION_11B
+
+ARCHITECTURES = {
+    cfg.name: cfg
+    for cfg in [
+        GEMMA3_27B,
+        MOONSHOT_V1_16B_A3B,
+        RWKV6_3B,
+        QWEN2_7B,
+        QWEN3_MOE_235B_A22B,
+        YI_34B,
+        ARCTIC_480B,
+        RECURRENTGEMMA_2B,
+        MUSICGEN_LARGE,
+        LLAMA32_VISION_11B,
+    ]
+}
+
+CNN_MODELS = {
+    PAPER_CNN_CIFAR10.name: PAPER_CNN_CIFAR10,
+    RESNET18_GN_CIFAR100.name: RESNET18_GN_CIFAR100,
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHITECTURES:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {sorted(ARCHITECTURES)}")
+    cfg = ARCHITECTURES[arch]
+    cfg.validate()
+    return cfg
+
+
+def list_archs():
+    return sorted(ARCHITECTURES)

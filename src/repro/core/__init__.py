@@ -1,0 +1,17 @@
+"""FedCGD core: the paper's contribution (WEMD, multi-level CGD,
+bandwidth-feasible scheduling)."""
+from repro.core.scheduling import (  # noqa: F401
+    Problem,
+    Schedule,
+    best_channel,
+    best_norm,
+    coordinate_descent,
+    exhaustive,
+    fed_cbs,
+    fscd,
+    greedy_scheduling,
+    power_of_choice,
+    random_schedule,
+)
+from repro.core.wemd import p1_objective, wemd_of_set  # noqa: F401
+from repro.core.bandwidth import min_bandwidth, uplink_rate  # noqa: F401

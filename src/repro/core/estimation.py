@@ -1,0 +1,137 @@
+"""On-line parameter estimation for P1 (paper Section V-C, Eq. 10-12).
+
+sigma (stochastic-gradient std): estimated per device from the first batch
+as the rms deviation of per-sample gradients from the batch gradient
+(Eq. 10), then aggregated as sqrt(sum_v alpha_v sigma_v^2) (Eq. 11).
+
+G (class-gradient norm scale): estimated from model deltas after local
+update, G = max_v ||grad_v - grad_global|| / ||p_v - p||_1 (Eq. 12); when
+every device holds a single class, per-class G_c is available (the
+FedCGD-FSCD-Gc variant).
+
+Per-sample gradients are the compute hot-spot here: naively vmapping
+grad() materializes B copies of the model gradient.  For softmax-CE
+classifiers the last-layer norm admits the decomposition
+||g_i||^2 = ||p_i - y_i||^2 * ||h_i||^2 (+1 for the bias), which
+``repro.kernels.persample_gradnorm`` fuses on TPU; `sigma_hat_lastlayer`
+uses that structure.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_weighted_sum(trees, weights):
+    out = jax.tree.map(lambda x: x * weights[0], trees[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = jax.tree.map(lambda x, y: x + y * w, out, t)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Eq. 10-11: sigma estimation
+
+
+def sigma_hat_exact(loss_per_sample: Callable, params, batch) -> jax.Array:
+    """Eq. 10 by brute force: vmapped per-sample grads.
+
+    loss_per_sample(params, example) -> scalar; batch is a pytree whose
+    leaves have a leading batch dim."""
+    grads = jax.vmap(lambda ex: jax.grad(loss_per_sample)(params, ex))(batch)
+    mean_grad = jax.tree.map(lambda g: g.mean(0), grads)
+    dev = jax.tree.map(lambda g, m: g - m[None], grads, mean_grad)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=tuple(
+        range(1, x.ndim))) for x in jax.tree.leaves(dev))
+    return jnp.sqrt(sq.mean())
+
+
+def sigma_hat_lastlayer(features: jax.Array, logits: jax.Array,
+                        labels: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """Eq. 10 restricted to the classifier head W in R^{d x C}:
+    per-sample grad g_i = h_i (p_i - y_i)^T, so
+    ||g_i - gbar||^2 is computed without materializing [B, d, C].
+
+    This is the quantity FedCGD ships to the server each round; the full-
+    model sigma is proportional for well-conditioned nets (validated in
+    tests against sigma_hat_exact)."""
+    if use_kernel:
+        from repro.kernels import ops
+        return ops.persample_gradnorm_sigma(features, logits, labels)
+    h = features.astype(jnp.float32)                       # [B, d]
+    p = jax.nn.softmax(logits.astype(jnp.float32), -1)     # [B, C]
+    e = p - jax.nn.one_hot(labels, logits.shape[-1])       # [B, C]
+    gbar_flat = (h.T @ e) / h.shape[0]                     # [d, C]
+    # ||g_i||^2 = ||h_i||^2 ||e_i||^2 ; <g_i, gbar> = h_i^T gbar e_i
+    gi_sq = (h * h).sum(-1) * (e * e).sum(-1)              # [B]
+    cross = jnp.einsum("bd,dc,bc->b", h, gbar_flat, e)
+    gbar_sq = jnp.sum(gbar_flat * gbar_flat)
+    dev_sq = gi_sq - 2.0 * cross + gbar_sq
+    return jnp.sqrt(jnp.maximum(dev_sq.mean(), 0.0))
+
+
+def sigma_hat_global(sigma_v: np.ndarray, alpha: np.ndarray) -> float:
+    """Eq. 11: sqrt(sum_v alpha_v sigma_v^2)."""
+    return float(np.sqrt(np.sum(np.asarray(alpha) *
+                                np.square(np.asarray(sigma_v)))))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 12: G estimation from model deltas
+
+
+def device_grad_estimate(w_new, w_old, tau: int, eta: float):
+    """nabla f_v ≈ (w_old - w_new)/(tau*eta)  (descent direction)."""
+    return jax.tree.map(lambda a, b: (b - a) / (tau * eta), w_new, w_old)
+
+
+def g_hat(device_grads, alphas, p_dev: np.ndarray,
+          global_dist: np.ndarray) -> float:
+    """Eq. 12: max_v ||grad_v - grad_global|| / ||p_v - p||_1."""
+    alphas = np.asarray(alphas, dtype=np.float64)
+    ghat_global = tree_weighted_sum(device_grads, list(alphas))
+    best = 0.0
+    for v, gv in enumerate(device_grads):
+        l1 = float(np.abs(p_dev[v] - global_dist).sum())
+        if l1 < 1e-9:
+            continue
+        num = float(tree_norm(tree_sub(gv, ghat_global)))
+        best = max(best, num / l1)
+    return best
+
+
+def g_hat_per_class(device_grads, alphas, device_class: np.ndarray,
+                    p_dev: np.ndarray, global_dist: np.ndarray,
+                    num_classes: int) -> np.ndarray:
+    """Per-class G_c when each device holds a single class (the paper's
+    FedCGD-FSCD-Gc variant): G_c = max_{v in Pi_c} ||grad_v - grad|| /
+    ||p_v - p||_1."""
+    alphas = np.asarray(alphas, dtype=np.float64)
+    ghat_global = tree_weighted_sum(device_grads, list(alphas))
+    G = np.zeros(num_classes)
+    for v, gv in enumerate(device_grads):
+        c = int(device_class[v])
+        l1 = float(np.abs(p_dev[v] - global_dist).sum())
+        if l1 < 1e-9:
+            continue
+        num = float(tree_norm(tree_sub(gv, ghat_global)))
+        G[c] = max(G[c], num / l1)
+    # classes never seen this round fall back to the max (conservative)
+    fallback = G.max() if G.max() > 0 else 1.0
+    return np.where(G > 0, G, fallback)

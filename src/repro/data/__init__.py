@@ -1,0 +1,15 @@
+from repro.data.datasets import (  # noqa: F401
+    ArrayDataset,
+    batch_iterator,
+    sample_batch,
+    synthetic_image_dataset,
+    synthetic_token_dataset,
+    train_test_split,
+)
+from repro.data.partition import (  # noqa: F401
+    apply_imbalance,
+    dirichlet_partition,
+    global_distribution,
+    label_distributions,
+    sort_and_partition,
+)

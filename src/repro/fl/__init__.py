@@ -1,0 +1,3 @@
+from repro.fl.rounds import FederatedTrainer, FLConfig  # noqa: F401
+from repro.fl.client import make_local_update, payload_bits  # noqa: F401
+from repro.fl.server import aggregate  # noqa: F401

@@ -1,0 +1,57 @@
+"""Client-side local update (paper Eq. 1): tau mini-batch SGD steps.
+
+``make_local_update`` returns a jitted function that runs every available
+device's local update *in one XLA program* via vmap over the device axis —
+the single-host simulation analogue of devices computing in parallel.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_local_update(loss_fn: Callable, eta: float, tau: int):
+    """loss_fn(params, batch, rng) -> (loss, metrics).
+
+    Returns update(params, batches, rng) where ``batches`` is a pytree
+    whose leaves have leading dims [num_devices, tau, batch, ...]; the
+    same initial params are used by every device (edge model broadcast).
+    Output params have a leading [num_devices] dim; also returns the mean
+    loss per device [num_devices]."""
+
+    def one_device(params, dev_batches, rng):
+        def step(carry, xs):
+            p, r = carry
+            batch, = xs
+            r, sub = jax.random.split(r)
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(p, batch, sub)
+            p = jax.tree.map(lambda a, g: a - eta * g.astype(a.dtype),
+                             p, grads)
+            return (p, r), loss
+
+        (params, _), losses = jax.lax.scan(
+            step, (params, rng), (dev_batches,))
+        return params, losses.mean()
+
+    @jax.jit
+    def update(params, batches, rng):
+        num_dev = jax.tree.leaves(batches)[0].shape[0]
+        rngs = jax.random.split(rng, num_dev)
+        return jax.vmap(one_device, in_axes=(None, 0, 0))(
+            params, batches, rngs)
+
+    return update
+
+
+def model_delta(new_params, old_params):
+    """g_v = w_v^{(j+1)} - w_v^{(j)} (uploaded payload)."""
+    return jax.tree.map(lambda a, b: a - b, new_params, old_params)
+
+
+def payload_bits(params, bits_per_param: int = 32) -> float:
+    """D_w: uplink payload size of one model update."""
+    return sum(x.size for x in jax.tree.leaves(params)) * bits_per_param

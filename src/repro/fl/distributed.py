@@ -1,0 +1,85 @@
+"""Distributed federated training step (DESIGN.md §3: pod axis = FL silo).
+
+For tau = 1 (the paper's primary regime, Fig. 4a) a FedCGD round is
+
+    w' = sum_s alpha_s (w - eta grad f_s(w)) = w - eta sum_s alpha_s grad f_s(w)
+
+i.e. one SGD step on the *schedule-weighted* loss.  So the compiled
+multi-pod artifact is a single jitted ``fed_train_step`` whose per-example
+loss weights carry alpha_v * x_v: the schedule changes round to round, the
+executable never does.  Unscheduled silos get weight 0 — the TPU-idiomatic
+analogue of "the device does not transmit" (DESIGN.md §3).
+
+``make_train_step`` builds the per-arch step used by the dry-run
+(single-pod: plain SGD LM step; multi-pod: weighted federated step), and
+``make_serve_step`` the decode step.  Both consume ShapeDtypeStructs only.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.sharding import ShardingCtx
+
+
+def make_train_step(cfg: ModelConfig, ctx: Optional[ShardingCtx],
+                    eta: float = 0.1, federated: bool = False):
+    """Returns train_step(params, batch) -> (params, metrics).
+
+    batch: tokens/targets [B, S] (+ modality extras); when ``federated``,
+    batch['schedule_weights'] [B] carries alpha_v * x_v per example
+    (examples of silo s all share weight alpha_s).
+    """
+
+    def train_step(params, batch):
+        def loss(p):
+            lm_batch = dict(batch)
+            if federated:
+                w = batch["schedule_weights"].astype(jnp.float32)
+                base = lm_batch.get("loss_mask")
+                S = batch["targets"].shape[1]
+                m = w[:, None] * (base if base is not None
+                                  else jnp.ones((w.shape[0], S), jnp.float32))
+                lm_batch["loss_mask"] = m
+                lm_batch.pop("schedule_weights", None)
+            return T.loss_fn(p, cfg, lm_batch, ctx)
+
+        (total, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        new_params = jax.tree.map(
+            lambda p, g: p - eta * g.astype(p.dtype), params, grads)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics, loss=total, grad_norm=gnorm)
+        return new_params, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: Optional[ShardingCtx]):
+    def serve_step(params, cache, batch):
+        logits, new_cache = T.serve_step(params, cfg, cache, batch, ctx)
+        return logits, new_cache
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: Optional[ShardingCtx],
+                      cache_len: int):
+    def prefill_step(params, batch):
+        logits, _, cache = T.forward(params, cfg, batch, ctx,
+                                     collect_cache=True, cache_len=cache_len)
+        return logits[:, -1:], cache
+    return prefill_step
+
+
+def silo_weights(schedule_mask, n_silos: int):
+    """alpha_v * x_v (Eq. 2) for the weighted federated step: equal
+    dataset sizes => alpha = mask / sum(mask)."""
+    m = jnp.asarray(schedule_mask, jnp.float32)
+    return m / jnp.maximum(m.sum(), 1.0) * n_silos
+    # (scaled by n_silos so that an all-ones schedule reproduces the plain
+    #  unweighted mean loss exactly)

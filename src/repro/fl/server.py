@@ -1,0 +1,32 @@
+"""Edge-server aggregation (paper Eq. 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def aggregate(device_params, mask: np.ndarray, weights: np.ndarray = None):
+    """Weighted FedAvg over scheduled devices.
+
+    device_params: pytree with leading [V] device dim (vmapped local
+    update output); mask [V] bool; weights default alpha_v = 1/|Pi|
+    (equal dataset sizes, paper Sec. V-A)."""
+    mask = np.asarray(mask, dtype=np.float64)
+    s = mask.sum()
+    if weights is None:
+        weights = mask / max(s, 1.0)
+    else:
+        weights = np.asarray(weights) * mask
+        weights = weights / max(weights.sum(), 1e-12)
+    w = jnp.asarray(weights, dtype=jnp.float32)
+
+    def agg(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        return (leaf.astype(jnp.float32) * wb).sum(0).astype(leaf.dtype)
+
+    return jax.tree.map(agg, device_params)
+
+
+def select_device(device_params, v: int):
+    return jax.tree.map(lambda x: x[v], device_params)

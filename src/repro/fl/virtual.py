@@ -1,0 +1,23 @@
+"""Virtual centralized model v^{(j)} (paper Section IV).
+
+    v^{(j)} = w^{(j-1)} - eta * tau * grad F(w^{(j-1)})
+
+grad F is approximated with a large pooled batch from the union of the
+participating devices' data (the best available surrogate for the global
+dataset).  fc_difference(w, v) then measures U_j, making Proposition 1 /
+Theorem 1 empirically checkable (tests + benchmarks do exactly that).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.cgd import fc_difference  # noqa: F401  (re-export)
+
+
+def virtual_step(loss_fn, params, global_batch, eta: float, tau: int,
+                 rng=None):
+    (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, global_batch, rng)
+    v = jax.tree.map(lambda p, g: p - eta * tau * g.astype(p.dtype),
+                     params, grads)
+    return v, grads, loss

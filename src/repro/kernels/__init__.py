@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated via interpret=True on CPU).
+
+  flash_attention     causal + sliding-window attention (MXU-tiled)
+  rwkv_scan           RWKV6 chunked WKV recurrence, log-space decays
+  rglru_scan          RG-LRU diagonal linear recurrence, sequential grid
+  persample_gradnorm  fused FedCGD sigma-hat (Eq. 10) for softmax-CE heads
+
+ops.py exposes jit'd wrappers; ref.py the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,45 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel body executes as Python/jnp, validating the exact TPU code path.
+On a real TPU backend ``interpret=False`` compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.persample_gradnorm import persample_gradnorm_pallas
+from repro.kernels.rglru_scan import rglru_pallas
+from repro.kernels.rwkv_scan import wkv_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,H,S,hd] layout (kernel layout; models use [B,S,H,hd])."""
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=_interpret())
+
+
+def wkv(r, k, v, w, u):
+    return wkv_pallas(r, k, v, w, u, interpret=_interpret())
+
+
+def rglru(a, b, h0):
+    return rglru_pallas(a, b, h0, interpret=_interpret())
+
+
+def persample_gradnorm_sigma(features, logits, labels):
+    sigma, _ = persample_gradnorm_pallas(features, logits, labels,
+                                         interpret=_interpret())
+    return sigma
+
+
+__all__ = ["attention", "wkv", "rglru", "persample_gradnorm_sigma",
+           "flash_attention", "wkv_pallas", "rglru_pallas",
+           "persample_gradnorm_pallas", "ref"]

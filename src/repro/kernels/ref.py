@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately naive (dense masks, step-by-step recurrences):
+correctness first, speed irrelevant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """q [B,H,S,hd], k/v [B,H,T,hd] -> [B,H,S,hd]. Dense masked softmax."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= ki <= qi + (T - S)          # right-aligned when T > S
+    if window > 0:
+        ok &= ki > qi + (T - S) - window
+    scores = jnp.where(ok, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def wkv_ref(r, k, v, w, u, state=None):
+    """RWKV6 naive recurrence. r,k,v,w [B,T,H,hd]; u [H,hd];
+    state [B,H,hd,hd] f32. Returns (y [B,T,H,hd], final_state)."""
+    B, T, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    rf, kf, vf, wf = (a.astype(jnp.float32).transpose(1, 0, 2, 3)
+                      for a in (r, k, v, w))                # [T,B,H,hd]
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        y = jnp.einsum("bhd,bhdv->bhv", rt, S) \
+            + jnp.einsum("bhd,hd,bhd->bh", rt, uf, kt)[..., None] * vt
+        S = wt[..., None] * S + jnp.einsum("bhd,bhv->bhdv", kt, vt)
+        return S, y
+
+    final, ys = jax.lax.scan(step, state, (rf, kf, vf, wf))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), final
+
+
+def rglru_ref(a, b, h0):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + b_t, step by step.
+    a, b [B,T,D] f32; h0 [B,D]. Returns (h [B,T,D], h_T)."""
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    final, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                        b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2), final
+
+
+def persample_gradnorm_ref(features, logits, labels):
+    """sigma-hat (Eq. 10) for a softmax-CE linear head, materializing the
+    full per-sample gradient tensor [B, d, C] (the thing the kernel
+    avoids).  Returns (sigma, gi_sq [B])."""
+    h = features.astype(jnp.float32)
+    p = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    e = p - jax.nn.one_hot(labels, logits.shape[-1])
+    g = h[:, :, None] * e[:, None, :]                  # [B, d, C]
+    gbar = g.mean(0)
+    dev = g - gbar[None]
+    dev_sq = (dev * dev).sum((1, 2))
+    return jnp.sqrt(dev_sq.mean()), (g * g).sum((1, 2))

@@ -1,0 +1,86 @@
+"""RG-LRU diagonal linear recurrence as a Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t over time, per channel.  Grid
+(batch, channel_blocks, time_chunks) with the time axis innermost
+(sequential); the running h lives in VMEM scratch.  Within a chunk the
+recurrence is unrolled with a fori_loop of VPU element-wise ops — the
+"sequential grid" TPU variant of the GPU parallel-scan kernels; the
+associative-scan alternative is what models/rglru.py uses at the XLA
+level (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+DEFAULT_BLOCK_D = 256
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, h_out_ref, h_ref, *,
+                  chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0]
+
+    a = a_ref[0]                                   # [C, D]
+    b = b_ref[0]
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        y_ref[0, t] = h
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, body, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        h_out_ref[0] = h
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def rglru_pallas(a, b, h0, *, chunk: int = DEFAULT_CHUNK,
+                 block_d: int = DEFAULT_BLOCK_D, interpret: bool = False):
+    """a, b [B,T,D] f32; h0 [B,D] f32 -> (h [B,T,D], h_T [B,D])."""
+    B, T, D = a.shape
+    pad_t = (-T) % chunk
+    if pad_t:
+        a = jnp.pad(a, ((0, 0), (0, pad_t), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad_t), (0, 0)))
+    block_d = min(block_d, D)
+    pad_d = (-D) % block_d
+    if pad_d:
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad_d)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad_d)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_d)))
+    Tp, Dp = T + pad_t, D + pad_d
+
+    grid = (B, Dp // block_d, Tp // chunk)
+    y, hT = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d, c: (b_, c, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d, c: (b_, c, d)),
+            pl.BlockSpec((1, block_d), lambda b_, d, c: (b_, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d, c: (b_, c, d)),
+            pl.BlockSpec((1, block_d), lambda b_, d, c: (b_, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Tp, Dp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Dp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y[:, :T, :D], hT[:, :D]

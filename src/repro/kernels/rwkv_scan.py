@@ -1,0 +1,116 @@
+"""RWKV6 WKV recurrence as a chunked Pallas TPU kernel.
+
+Grid (batch*heads, num_chunks): the chunk axis is the innermost
+(sequential) grid dim, so the [hd, hd] recurrent state lives in VMEM
+scratch and is carried across chunks.  Within a chunk all pairwise decay
+products are computed in log space (every exponent <= 0, no overflow) and
+contracted on the MXU; this is the TPU-native adaptation of the GPU
+token-parallel WKV kernels (DESIGN.md §3).
+
+VMEM per step: 4 chunk blocks [C, hd] + pair tensor [C, C, hd] + state
+[hd, hd] f32 — with C=16, hd=64: ~350 kB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 16
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_ref,
+                *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)              # [C, hd]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)              # [hd]
+
+    logw = jnp.log(jnp.clip(w, 1e-8, 1.0))        # [C, hd], <= 0
+    lc = jnp.cumsum(logw, axis=0)
+    lc_prev = lc - logw                           # log prod_{u<=t-1}
+    lct = lc[-1]                                  # [hd]
+
+    S = s_ref[...]
+    # inter-chunk
+    rdec = r * jnp.exp(lc_prev)
+    y = jax.lax.dot_general(rdec, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # intra-chunk pairwise (log-space, strictly lower triangular)
+    ldiff = lc_prev[:, None, :] - lc[None, :, :]  # [C, C, hd]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = (s_idx < t_idx)[:, :, None]
+    pair = jnp.where(tri, ldiff, -1e30)
+    A = (r[:, None, :] * jnp.exp(pair) * k[None, :, :]).sum(axis=-1)
+    A = A + jnp.where(
+        (s_idx == t_idx), ((r * u[None, :] * k).sum(axis=-1))[:, None], 0.0)
+    y = y + jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update
+    kdec = k * jnp.exp(lct[None, :] - lc)
+    s_ref[...] = jax.lax.dot_general(
+        kdec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + jnp.exp(lct)[:, None] * S
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        s_out_ref[0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_pallas(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK,
+               interpret: bool = False):
+    """r,k,v,w [B,T,H,hd]; u [H,hd] -> (y [B,T,H,hd], state [B,H,hd,hd])."""
+    B, T, H, hd = r.shape
+    pad = (-T) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    Tp = T + pad
+
+    def flat(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, Tp, hd)
+
+    rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w)
+    uf = jnp.broadcast_to(u, (B, H, hd)).reshape(B * H, hd)
+
+    grid = (B * H, Tp // chunk)
+    y, s = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Tp, hd), r.dtype),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf)
+    y = y.reshape(B, H, Tp, hd).transpose(0, 2, 1, 3)[:, :T]
+    return y, s.reshape(B, H, hd, hd)

@@ -1,0 +1,261 @@
+"""Parameter / input / cache sharding rules for the production mesh.
+
+Two regimes per architecture (DESIGN.md §3):
+
+* **Megatron TP + sequence-parallel residual** when attention heads and
+  d_ff divide the 16-way model axis (gemma3, moonshot, qwen3-moe,
+  musicgen, llama-vision): heads/d_ff/experts/vocab column-parallel,
+  residual stream sequence-sharded between layers.
+
+* **FSDP + context parallelism** otherwise (qwen2 28H, yi 56H, arctic
+  56H, recurrentgemma 10H, rwkv6 40H): parameters stored sharded over
+  (data x model) and gathered per scan step; compute is token-parallel
+  with queries sequence-sharded and (small, GQA) KV gathered.
+
+MoE expert tables are always expert-sharded over 'model' + FSDP over
+'data' (matching the shard_map in moe.py).  Decode KV caches shard
+kv-heads over 'model' when divisible, else cache length; batch-1 decode
+shards cache length over the idle batch axes too.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.shapes import CACHE_PAD, InputShape
+from repro.models import transformer as T
+from repro.sharding import ShardingCtx
+
+
+def tp_capable(cfg: ModelConfig, model_axis_size: int = 16) -> bool:
+    if cfg.num_heads and cfg.num_heads % model_axis_size != 0:
+        return False
+    if cfg.d_ff and cfg.d_ff % model_axis_size != 0:
+        return False
+    return True
+
+
+def make_ctx(cfg: ModelConfig, mesh: Mesh, shape: Optional[InputShape] = None,
+             opt: bool = False) -> ShardingCtx:
+    multi_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    m = mesh.shape["model"]
+    tp = tp_capable(cfg, m)
+    # --opt: context-parallel attention — attention weights FSDP'd over
+    # data, queries sequence-sharded, GQA KV gathered; kills the S<->head
+    # "involuntary full rematerialization" reshards.  Measured per shape
+    # (EXPERIMENTS.md §Perf): 1.87x on train, 1.08x on prefill, but a
+    # REGRESSION on decode (single-token steps re-gather FSDP weights),
+    # so the policy is per-job-kind.
+    hybrid = opt and (shape is None or shape.kind in ("train", "prefill"))
+    seq_axes = []
+    if shape is not None and shape.kind in ("decode", "prefill"):
+        # prefill also OUTPUTS a cache of seq_len — shard it the same way
+        if shape.global_batch == 1:
+            seq_axes += ["pod", "data"] if multi_pod else ["data"]
+        if not (tp and cfg.num_kv_heads % m == 0):
+            seq_axes.append("model")
+    return ShardingCtx(mesh=mesh, batch_axes=batch_axes, model_axis="model",
+                       fsdp_axes=("data",), seq_axes=tuple(seq_axes), tp=tp,
+                       hybrid=hybrid)
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings
+
+
+def _dims_divisible(shape, axes_size, dim):
+    return shape[dim] % axes_size == 0
+
+
+def _param_rule(path: str, shape, cfg: ModelConfig, ctx: ShardingCtx):
+    """PartitionSpec entries for a (possibly period-stacked) param leaf."""
+    mesh = ctx.mesh
+    m = ctx.model_axis
+    msize = mesh.shape[m]
+    dm = ("data", m)
+    dmsize = mesh.shape["data"] * msize
+    tp = ctx.tp
+    name = path.split("/")[-1]
+
+    stacked = path.startswith("blocks/")
+    dims = list(shape[1:]) if stacked else list(shape)
+    spec = [None] * len(dims)
+
+    def fsdp_largest():
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        for i in order:
+            if dims[i] >= 1024 and dims[i] % dmsize == 0:
+                spec[i] = dm
+                return
+        for i in order:
+            if dims[i] >= 1024 and dims[i] % mesh.shape["data"] == 0:
+                spec[i] = "data"
+                return
+
+    if name in ("embed",):
+        # vocab over model AND d over data: the embedding GRADIENT (f32,
+        # several live copies around the tied-head reshard) dominated
+        # gemma3 train temps at 5.6 GiB per unsharded copy (§Perf pair 2)
+        spec[0] = m if dims[0] % msize == 0 else None
+        if dims[1] % mesh.shape["data"] == 0:
+            spec[1] = "data"
+    elif name in ("lm_head",):
+        spec[1] = m if dims[1] % msize == 0 else None
+    elif name in ("wq", "wk", "wv", "wo") and len(dims) == 3:
+        if ctx.hybrid:
+            # context-parallel attention: weights only storage-sharded
+            if dims[0] % mesh.shape["data"] == 0:
+                spec[0] = "data"
+            elif dims[2] % mesh.shape["data"] == 0:
+                spec[2] = "data"
+        elif tp and name != "wo" and dims[1] % msize == 0:
+            spec[1] = m
+        elif tp and name == "wo" and dims[0] % msize == 0:
+            spec[0] = m
+        else:
+            fsdp_largest()
+    elif name in ("w_gate", "w_up", "w_down") and len(dims) == 3 \
+            and cfg.num_experts and dims[0] == cfg.num_experts:
+        # MoE expert tables: expert-sharded + FSDP (matches moe.shard_map)
+        spec[0] = m
+        fd = 1 if name in ("w_gate", "w_up") else 2
+        if dims[fd] % mesh.shape["data"] == 0:
+            spec[fd] = "data"
+    elif name in ("w_gate", "w_up", "w_in", "W_k") and len(dims) == 2:
+        if tp and not ctx.hybrid and dims[1] % msize == 0:
+            spec[1] = m   # column parallel
+        else:
+            fsdp_largest()
+    elif name in ("w_down", "w_out", "w_o", "W_v", "W_o") and len(dims) == 2:
+        if tp and not ctx.hybrid and dims[0] % msize == 0:
+            spec[0] = m   # row parallel
+        else:
+            fsdp_largest()
+    elif name in ("W_r", "W_g", "w_x", "W_i") and len(dims) == 2:
+        fsdp_largest()
+    elif len(dims) >= 2 and max(dims) * min(dims) >= (1 << 22):
+        fsdp_largest()
+
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def param_shardings(params_spec, cfg: ModelConfig, ctx: ShardingCtx):
+    """Pytree of NamedSharding matching jax.eval_shape(init) output."""
+    def one(pathspec, leaf):
+        path = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                        for p in pathspec)
+        return NamedSharding(ctx.mesh, _param_rule(path, leaf.shape, cfg, ctx))
+
+    return jax.tree_util.tree_map_with_path(one, params_spec)
+
+
+# ---------------------------------------------------------------------------
+# activations / batch / cache
+
+
+def _shardable(dim, mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0 and n > 1
+
+
+def batch_shardings(batch_spec, ctx: ShardingCtx):
+    mesh = ctx.mesh
+    ba = ctx.batch_axes
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        if _shardable(leaf.shape[0], mesh, ba):
+            spec[0] = ba if len(ba) > 1 else ba[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_spec)
+
+
+def cache_shardings(cache_spec, cfg: ModelConfig, ctx: ShardingCtx):
+    mesh = ctx.mesh
+    ba = ctx.batch_axes
+    m = ctx.model_axis
+    msize = mesh.shape[m]
+    seq = ctx.seq_axes
+    kv_heads_sharded = ctx.tp and cfg.num_kv_heads % msize == 0
+
+    def one(pathspec, leaf):
+        path = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                        for p in pathspec)
+        stacked = path.startswith("blocks/")
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        name = path.split("/")[-1]
+        spec = [None] * len(shape)
+        if name in ("k", "v") and len(shape) == 4:
+            B, n, KV, hd = shape
+            if _shardable(B, mesh, ba):
+                spec[0] = ba if len(ba) > 1 else ba[0]
+            if seq and _shardable(n, mesh, seq):
+                spec[1] = tuple(seq) if len(seq) > 1 else seq[0]
+            if kv_heads_sharded:
+                spec[2] = m
+        elif name in ("wkv", "shift1", "shift2", "h", "conv") and shape:
+            if _shardable(shape[0], mesh, ba):
+                spec[0] = ba if len(ba) > 1 else ba[0]
+        if stacked:
+            spec = [None] + spec
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_spec)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins (no allocation — the dry-run contract)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, federated: bool = False):
+    """ShapeDtypeStructs for every model input of this (arch, shape)."""
+    B = shape.global_batch
+    S = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "audio":
+            batch.pop("tokens")
+            batch["frame_embeddings"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.encoder_dim), dt)
+        if cfg.family == "vlm":
+            batch["encoder_embeddings"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_encoder_tokens, cfg.encoder_dim), dt)
+        if shape.kind == "train":
+            batch["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+            if federated:
+                batch["schedule_weights"] = jax.ShapeDtypeStruct(
+                    (B,), jnp.float32)
+        return batch
+
+    # decode: one token + cache of seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.family == "audio":
+        batch.pop("tokens")
+        batch["frame_embeddings"] = jax.ShapeDtypeStruct(
+            (B, 1, cfg.encoder_dim), dt)
+    return batch
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: T.init(jax.random.key(0), cfg))
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    cache_len = shape.seq_len + CACHE_PAD
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, cache_len))

@@ -1,0 +1,389 @@
+"""Shared neural-net primitives for the model zoo (pure JAX, functional).
+
+Parameters are plain dict pytrees.  Every apply function takes the config
+and an optional ShardingCtx.  Attention uses a query-chunked (FlashAttention
+-style online) formulation above ``CHUNK_THRESHOLD`` so 32k prefill never
+materializes an S x S score matrix; the Pallas kernel in
+``repro.kernels.flash_attention`` implements the same contract for TPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import ShardingCtx, constrain
+
+CHUNK_THRESHOLD = 2048   # use query-chunked attention above this seq len
+Q_CHUNK = 512
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if len(shape) == 3:           # [d, H, hd] fused head projections
+        fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm_init(dim, dtype):
+    return {"scale": jnp.zeros((dim,), dtype=dtype)}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def group_norm(x, num_groups, eps: float = 1e-5, scale=None, bias=None):
+    """GroupNorm over the last dim (used by RWKV6 wkv output)."""
+    dtype = x.dtype
+    d = x.shape[-1]
+    g = x.reshape(x.shape[:-1] + (num_groups, d // num_groups)).astype(jnp.float32)
+    mean = g.mean(-1, keepdims=True)
+    var = g.var(-1, keepdims=True)
+    g = (g - mean) * jax.lax.rsqrt(var + eps)
+    g = g.reshape(x.shape)
+    if scale is not None:
+        g = g * scale.astype(jnp.float32)
+    if bias is not None:
+        g = g + bias.astype(jnp.float32)
+    return g.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# positions
+
+
+def rope(x, positions, theta: float):
+    """x [..., S, H, hd]; positions [..., S] (broadcastable).
+
+    Angles are computed in f32 but sin/cos are cast to x.dtype BEFORE the
+    rotation: multiplying bf16 activations by f32 tables promotes the full
+    q/k tensors to f32, and under GSPMD the GQA-expand all-gather then
+    moves 2x the bytes (7 GiB/step extra for qwen2 train_4k — §Perf)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freq
+    sin = jnp.sin(angles).astype(x.dtype)
+    cos = jnp.cos(angles).astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sinusoidal_pos(positions, dim):
+    half = dim // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                   * (math.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def attention_params_init(key, cfg: ModelConfig, dtype, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, KV, hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, KV, hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H, hd, d), scale=1.0 / math.sqrt(H * hd),
+                         dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype=dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype=dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype=dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rms_norm_init(hd, dtype)
+        p["k_norm"] = rms_norm_init(hd, dtype)
+    if cross:
+        p["gate"] = jnp.zeros((), dtype=jnp.float32)  # tanh-gated cross attn
+    return p
+
+
+def _expand_kv(k, H):
+    """[B,T,KV,hd] -> [B,T,H,hd] by group broadcast (GQA)."""
+    B, T, KV, hd = k.shape
+    G = H // KV
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, T, KV, G, hd))
+    return k.reshape(B, T, H, hd)
+
+
+def _mask_bias(q_pos, k_pos, window: int, causal: bool):
+    """Additive f32 bias [q, k] from position vectors."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    ok &= k_pos[None, :] >= 0   # slots with pos -1 are invalid (ring buffer)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _attend(q, k, v, bias):
+    """q [B,S,H,hd], k/v [B,T,H,hd], bias [S,T] or [B,S,T]-broadcastable.
+
+    q/k are upcast EXPLICITLY rather than via preferred_element_type: the
+    VJP of a bf16-in/f32-out dot emits f32 cotangents that flow back
+    through rope/projections into the residual stream un-converted —
+    every layer's [tokens, d_model] cotangent then lives in f32 (the
+    ~50 GiB gemma3 temp blowup, §Perf pair 2).  An explicit astype puts a
+    convert on the backward path, so cotangents re-enter bf16 here."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = scores + bias[..., None, :, :] if bias.ndim == 3 else scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+    return out
+
+
+def multihead_attention(params, cfg: ModelConfig, x, *, kv_x=None,
+                        q_pos=None, k_pos=None, causal=True, window=0,
+                        rope_theta=None, ctx: Optional[ShardingCtx] = None,
+                        cache=None, cache_fixed_kv=False):
+    """General GQA attention.
+
+    x [B,S,d]; kv_x defaults to x (self attention).  If ``cache`` is given
+    we are decoding: S==1, cache holds {'k','v','slot_pos'} and is updated
+    (unless cache_fixed_kv, e.g. cross-attention KV precomputed at prefill).
+    Returns (out [B,S,d], new_cache).
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kv_x = x if kv_x is None else kv_x
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    fresh_kv = not (cache is not None and cache_fixed_kv)
+    if fresh_kv:
+        k = jnp.einsum("bsd,dhk->bshk", kv_x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_x, params["wv"])
+        if "bk" in params:
+            k, v = k + params["bk"], v + params["bv"]
+        new_cache = None
+    else:
+        # cross-attention KV precomputed at prefill (already normed + roped)
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+
+    if "q_norm" in params:
+        q = rms_norm(params["q_norm"], q)
+        if fresh_kv:
+            k = rms_norm(params["k_norm"], k)
+
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    if cfg.pos_embedding == "rope" and q_pos is not None:
+        q = rope(q, q_pos, theta)
+        if fresh_kv:
+            k = rope(k, k_pos if k_pos is not None else q_pos, theta)
+
+    if cache is not None and not cache_fixed_kv:
+        # decode: write new kv into ring/linear buffer at slot
+        slot = cache["next_slot"]          # scalar int32
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1) \
+            if False else cache["k"].at[:, slot].set(k[:, 0])
+        v_cache = cache["v"].at[:, slot].set(v[:, 0])
+        slot_pos = cache["slot_pos"].at[slot].set(q_pos[0, 0] if q_pos.ndim == 2
+                                                  else q_pos[0])
+        wsize = cache["k"].shape[1]
+        new_cache = {
+            "k": k_cache, "v": v_cache, "slot_pos": slot_pos,
+            "next_slot": (slot + 1) % wsize,
+        }
+        k, v = k_cache, v_cache
+        k_pos_eff = slot_pos[None, :]
+    else:
+        k_pos_eff = (k_pos if k_pos is not None else q_pos)
+        if k_pos_eff is not None and k_pos_eff.ndim == 1:
+            k_pos_eff = k_pos_eff[None, :]
+
+    k_raw, v_raw = k, v            # pre-expansion (post-norm/rope) for caches
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    context_parallel = ctx is not None and (not ctx.tp or ctx.hybrid)
+    if context_parallel and S > 1:
+        # queries sharded over seq, (small GQA) KV replicated/gathered —
+        # context parallelism; no S<->head resharding anywhere
+        q = constrain(q, ctx, "batch", "sp", None, None)
+        k = constrain(k, ctx, "batch", None, None, None)
+        v = constrain(v, ctx, "batch", None, None, None)
+    else:
+        q = constrain(q, ctx, "batch", None, "model", None)
+        k = constrain(k, ctx, "batch", "seq" if S == 1 else None,
+                      "model", None)
+        v = constrain(v, ctx, "batch", "seq" if S == 1 else None,
+                      "model", None)
+
+    qp = q_pos if q_pos is not None else jnp.arange(S)
+    if qp.ndim == 1:
+        qp = qp[None, :]
+    kp = k_pos_eff if k_pos_eff is not None else jnp.arange(k.shape[1])[None, :]
+
+    if S == 1 or k.shape[1] <= CHUNK_THRESHOLD or cfg.unroll_for_costing:
+        bias = jax.vmap(lambda a, b: _mask_bias(a, b, window, causal))(
+            jnp.broadcast_to(qp, (B, S)), jnp.broadcast_to(kp, (B, k.shape[1])))
+        out = _attend(q, k, v, bias)
+    else:
+        out = _chunked_attend(q, k, v, qp, kp, window, causal)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if "gate" in params:
+        out = out * jnp.tanh(params["gate"]).astype(out.dtype)
+    return out, new_cache, (k_raw, v_raw)
+
+
+def _chunked_attend(q, k, v, q_pos, k_pos, window, causal):
+    """Query-chunked attention: never materializes [S,T] for full S.
+
+    q [B,S,H,hd]; scans over S in Q_CHUNK blocks.  For sliding-window
+    layers each query block only visits its [window + chunk] KV span
+    (positions here are contiguous sequence indices): ~2.7x less attention
+    compute and score memory on gemma3's 5-of-6 local layers (§Perf).
+    Flash-style blocking of the full KV axis is the Pallas kernel's job on
+    TPU; at the XLA level the [chunk, span] slice is memory-safe."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    q_pos = jnp.broadcast_to(q_pos, (B, S))
+    nchunk = -(-S // Q_CHUNK)
+    pad = nchunk * Q_CHUNK - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    qc = q.reshape(B, nchunk, Q_CHUNK, H, hd).transpose(1, 0, 2, 3, 4)
+    qpc = q_pos.reshape(B, nchunk, Q_CHUNK).transpose(1, 0, 2)
+
+    windowed = window > 0 and causal and T > window + Q_CHUNK
+    kv_span = min(window + Q_CHUNK, T)
+    starts = jnp.clip(jnp.arange(nchunk) * Q_CHUNK + Q_CHUNK - kv_span,
+                      0, T - kv_span)
+
+    @jax.checkpoint
+    def body(args):
+        # rematerialized in backward: the probs block is never stored
+        qi, qpi, start = args
+        if windowed:
+            ki = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+            kp = (start + jnp.arange(kv_span))[None, :]
+        else:
+            ki, vi = k, v
+            kp = k_pos
+        bias = jax.vmap(lambda a, b: _mask_bias(a, b, window, causal))(
+            qpi, jnp.broadcast_to(kp, (B, ki.shape[1])))
+        return _attend(qi, ki, vi, bias)
+
+    out = jax.lax.map(body, (qc, qpc, starts))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nchunk * Q_CHUNK, H, hd)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def swiglu_init(key, d, dff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, dff), dtype=dtype),
+        "w_up": dense_init(k2, (d, dff), dtype=dtype),
+        "w_down": dense_init(k3, (dff, d), dtype=dtype),
+    }
+
+
+def swiglu(params, x, ctx: Optional[ShardingCtx] = None, act=jax.nn.silu):
+    h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    # TP/hybrid: d_ff column-parallel (Megatron).  Pure-FSDP archs:
+    # token-parallel over the model axis instead — no full-sequence
+    # activation ever materializes and the only collectives are the
+    # per-layer FSDP weight gathers (§Perf iteration log).  NB: a plain
+    # P(batch, None, None) constraint here forced a 4.6 GiB/layer
+    # all-gather of the hidden — the original collective bottleneck.
+    if ctx is not None and ctx.tp and not ctx.hybrid:
+        h = constrain(h, ctx, "batch", None, "sp")
+    else:
+        h = constrain(h, ctx, "batch", "sp", None)
+    return h @ params["w_down"]
+
+
+def gelu_mlp_init(key, d, dff, dtype):
+    k1, k2 = jax.random.split(key, 2)
+    return {"w_in": dense_init(k1, (d, dff), dtype=dtype),
+            "w_out": dense_init(k2, (dff, d), dtype=dtype)}
+
+
+def gelu_mlp(params, x, ctx=None):
+    h = jax.nn.gelu(x @ params["w_in"])
+    h = constrain(h, ctx, "batch", None, "sp")
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+
+
+def softmax_cross_entropy(logits, targets, mask=None, label_smoothing=0.0):
+    """logits [..., C] f32; targets int [...]. Returns mean over mask.
+
+    The true-class logit is extracted with an iota-mask reduction instead
+    of take_along_axis: a gather along the vocab dim would force GSPMD to
+    all-gather vocab-sharded logits (37 GiB/device for qwen2 train_4k),
+    while the masked reduction partitions cleanly."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+              == targets[..., None])
+    true_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    loss = logz - true_logit
+    if label_smoothing:
+        loss = (1 - label_smoothing) * loss + label_smoothing * (
+            logz - logits.mean(axis=-1))
+    if mask is None:
+        return loss.mean()
+    mask = mask.astype(jnp.float32)
+    return (loss * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def softmax_cross_entropy_sums(logits, targets, mask=None,
+                               label_smoothing=0.0):
+    """(weighted loss sum, weight sum) — the chunked-CE building block."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+              == targets[..., None])
+    true_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    loss = logz - true_logit
+    if label_smoothing:
+        loss = (1 - label_smoothing) * loss + label_smoothing * (
+            logz - logits.mean(axis=-1))
+    if mask is None:
+        mask = jnp.ones(loss.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    return (loss * mask).sum(), mask.sum()

@@ -1,0 +1,73 @@
+"""Model registry: a uniform functional handle over every architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHITECTURES, CNN_MODELS, get_config
+from repro.configs.base import ModelConfig
+from repro.configs.paper_cnn import CNNConfig
+from repro.models import cnn as C
+from repro.models import transformer as T
+from repro.models.layers import softmax_cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    loss_fn: Callable          # (params, batch, rng=None, ctx=None) -> (loss, metrics)
+    forward: Callable
+    init_cache: Optional[Callable] = None
+    serve_step: Optional[Callable] = None
+
+    @property
+    def name(self):
+        return self.cfg.name
+
+
+def _lm_model(cfg: ModelConfig) -> Model:
+    def loss(params, batch, rng=None, ctx=None):
+        return T.loss_fn(params, cfg, batch, ctx)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: T.init(key, cfg),
+        loss_fn=loss,
+        forward=lambda params, batch, ctx=None, **kw: T.forward(
+            params, cfg, batch, ctx, **kw),
+        init_cache=lambda batch, cache_len: T.init_cache(cfg, batch, cache_len),
+        serve_step=lambda params, cache, batch, ctx=None: T.serve_step(
+            params, cfg, cache, batch, ctx),
+    )
+
+
+def _cnn_model(cfg: CNNConfig) -> Model:
+    def loss(params, batch, rng=None, ctx=None):
+        logits = C.cnn_forward(params, cfg, batch["images"], rng)
+        ce = softmax_cross_entropy(logits, batch["labels"])
+        acc = (logits.argmax(-1) == batch["labels"]).mean()
+        return ce, {"ce_loss": ce, "accuracy": acc}
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: C.init_cnn(key, cfg),
+        loss_fn=loss,
+        forward=lambda params, batch, ctx=None, rng=None: C.cnn_forward(
+            params, cfg, batch["images"], rng),
+    )
+
+
+def build_model(arch_or_cfg) -> Model:
+    """arch name, ModelConfig, or CNNConfig -> Model."""
+    if isinstance(arch_or_cfg, CNNConfig):
+        return _cnn_model(arch_or_cfg)
+    if isinstance(arch_or_cfg, ModelConfig):
+        return _lm_model(arch_or_cfg)
+    name = arch_or_cfg
+    if name in CNN_MODELS:
+        return _cnn_model(CNN_MODELS[name])
+    return _lm_model(get_config(name))

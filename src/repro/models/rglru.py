@@ -1,0 +1,113 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    i_t = sigmoid(W_i x_t + b_i)                      (input gate)
+    r_t = sigmoid(W_r x_t + b_r)                      (recurrence gate)
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+TPU adaptation: the diagonal linear recurrence is evaluated with
+``jax.lax.associative_scan`` (log-depth, maps onto VPU elementwise ops)
+for train/prefill, and a single fused step for decode.  A Pallas kernel
+(`repro.kernels.rglru_scan`) implements the sequential-grid variant.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import ShardingCtx, constrain
+from repro.models.layers import dense_init
+
+RG_LRU_C = 8.0
+
+
+def recurrent_block_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    W = cfg.conv1d_width
+    ks = jax.random.split(key, 8)
+    # Lambda init so that a^c in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[0], (lru,), minval=0.9 ** 2, maxval=0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RG_LRU_C))     # softplus^-1
+    return {
+        "w_x": dense_init(ks[1], (d, lru), dtype=dtype),
+        "w_gate": dense_init(ks[2], (d, lru), dtype=dtype),
+        "conv_kernel": (jax.random.normal(ks[3], (W, lru)) * 0.1).astype(dtype),
+        "conv_bias": jnp.zeros((lru,), dtype),
+        "W_i": dense_init(ks[4], (lru, lru), dtype=dtype),
+        "b_i": jnp.zeros((lru,), jnp.float32),
+        "W_r": dense_init(ks[5], (lru, lru), dtype=dtype),
+        "b_r": jnp.zeros((lru,), jnp.float32),
+        "Lambda": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], (lru, d), dtype=dtype),
+    }
+
+
+def _causal_conv1d(kernel, bias, x, conv_state):
+    """Depthwise causal conv. x [B,T,lru]; conv_state [B,W-1,lru] history."""
+    W = kernel.shape[0]
+    xx = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xx[:, W - 1 - i: xx.shape[1] - i] * kernel[W - 1 - i]
+              for i in range(W))
+    new_state = xx[:, -(W - 1):] if W > 1 else conv_state
+    return out + bias, new_state
+
+
+def _rg_lru_coeffs(p, x):
+    """x [B,T,lru] -> (a, b) with h_t = a_t h_{t-1} + b_t, all f32."""
+    xf = x.astype(jnp.float32)
+    i = jax.nn.sigmoid(xf @ p["W_i"].astype(jnp.float32) + p["b_i"])
+    r = jax.nn.sigmoid(xf @ p["W_r"].astype(jnp.float32) + p["b_r"])
+    log_a = -RG_LRU_C * jax.nn.softplus(p["Lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0)) * (i * xf)
+    return a, b
+
+
+def rg_lru_scan(p, x, h0):
+    """Associative scan over time. x [B,T,lru]; h0 [B,lru] f32."""
+    a, b = _rg_lru_coeffs(p, x)
+    # fold h0 into the first step: h_1 = a_1 h_0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(p, x, h0):
+    """x [B,1,lru]; h0 [B,lru] f32."""
+    a, b = _rg_lru_coeffs(p, x)
+    h = a[:, 0] * h0 + b[:, 0]
+    return h[:, None, :].astype(x.dtype), h
+
+
+def recurrent_block(p, cfg: ModelConfig, x, state,
+                    ctx: Optional[ShardingCtx] = None, decode: bool = False):
+    """Griffin recurrent block. x [B,T,d];
+    state = {'h': [B,lru] f32, 'conv': [B,W-1,lru] f32}."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xb = x @ p["w_x"]
+    xb = constrain(xb, ctx, "batch", None, "sp")
+    xb, conv_state = _causal_conv1d(p["conv_kernel"], p["conv_bias"], xb,
+                                    state["conv"])
+    if decode:
+        h, h_last = rg_lru_step(p, xb, state["h"])
+    else:
+        h, h_last = rg_lru_scan(p, xb, state["h"])
+    out = (h * gate) @ p["w_out"]
+    return out, {"h": h_last, "conv": conv_state.astype(jnp.float32)}
+
+
+def init_recurrent_state(cfg: ModelConfig, batch: int):
+    lru = cfg.lru_width or cfg.d_model
+    W = cfg.conv1d_width
+    return {"h": jnp.zeros((batch, lru), jnp.float32),
+            "conv": jnp.zeros((batch, W - 1, lru), jnp.float32)}

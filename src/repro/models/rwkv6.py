@@ -1,0 +1,242 @@
+"""RWKV6 ("Finch", arXiv:2404.05892) time-mix and channel-mix blocks.
+
+The WKV recurrence has data-dependent per-channel decay:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (S in R^{hd x hd} per head)
+    y_t = r_t S_{t-1} + (r_t . (u * k_t)) v_t
+
+TPU adaptation (DESIGN.md §3): instead of a step-by-step scan we use a
+*chunked* formulation — within a chunk of C tokens all pairwise decay
+products are computed in log space (numerically safe: every exponent is
+<= 0) and contracted with matmuls that map onto the MXU; the inter-chunk
+state is carried by a scan over T/C chunks.  ``repro.kernels.rwkv_scan``
+implements the same math as a Pallas kernel; ``repro.kernels.ref`` holds
+the naive-recurrence oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import ShardingCtx, constrain
+from repro.models.layers import dense_init, group_norm
+
+WKV_CHUNK = 64
+LORA_RANK = 32
+
+
+def layer_norm_init(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype=dtype),
+            "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layer_norm(params, x, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+
+
+def time_mix_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H, hd = cfg.num_heads, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    r = LORA_RANK
+    return {
+        "maa_x": jnp.zeros((d,), dtype),
+        "maa_rkvwg": jnp.zeros((5, d), dtype),
+        "maa_A": dense_init(ks[0], (d, 5 * r), scale=0.01, dtype=dtype),
+        "maa_B": dense_init(ks[1], (5, r, d), scale=0.01, dtype=dtype),
+        "w_base": jnp.full((d,), -1.0, dtype=jnp.float32),   # decay bias
+        "w_A": dense_init(ks[2], (d, 64), scale=0.01, dtype=dtype),
+        "w_B": dense_init(ks[3], (64, d), scale=0.01, dtype=dtype),
+        "u": (jax.random.normal(ks[4], (H, hd)) * 0.1).astype(jnp.float32),
+        "W_r": dense_init(ks[5], (d, H * hd), dtype=dtype),
+        "W_k": dense_init(ks[6], (d, H * hd), dtype=dtype),
+        "W_v": dense_init(ks[7], (d, H * hd), dtype=dtype),
+        "W_g": dense_init(ks[8], (d, H * hd), dtype=dtype),
+        "W_o": dense_init(ks[9], (H * hd, d), dtype=dtype),
+        "gn_scale": jnp.ones((H * hd,), dtype),
+        "gn_bias": jnp.zeros((H * hd,), dtype),
+    }
+
+
+def channel_mix_init(key, cfg: ModelConfig, dtype):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "maa_k": jnp.zeros((d,), dtype),
+        "maa_r": jnp.zeros((d,), dtype),
+        "W_k": dense_init(ks[0], (d, dff), dtype=dtype),
+        "W_v": dense_init(ks[1], (dff, d), dtype=dtype),
+        "W_r": dense_init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def _token_shift(x, shift_state):
+    """x [B,T,d]; shift_state [B,d] (last token of previous segment)."""
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    return prev
+
+
+def _ddlerp(p, x, prev):
+    """RWKV6 data-dependent token-shift interpolation -> 5 mixed streams."""
+    sx = prev - x
+    xxx = x + sx * p["maa_x"]
+    B, T, d = x.shape
+    r = LORA_RANK
+    lora = jnp.tanh(xxx @ p["maa_A"]).reshape(B, T, 5, r)
+    adj = jnp.einsum("btfr,frd->fbtd", lora, p["maa_B"])     # [5,B,T,d]
+    mixed = x[None] + sx[None] * (p["maa_rkvwg"][:, None, None, :] + adj)
+    return mixed  # [5, B, T, d] -> r,k,v,w,g order
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = WKV_CHUNK,
+                unroll: bool = False):
+    """Chunked WKV recurrence.
+
+    r,k,v,w: [B,T,H,hd] (w = per-step decay in (0,1)); u [H,hd];
+    state [B,H,hd,hd] f32.  Returns (y [B,T,H,hd], final state).
+    All decay products are exp(sum of negative logs) -> no overflow.
+    """
+    B, T, H, hd = r.shape
+    C = chunk
+    if unroll:
+        # cost-accounting: cap the straight-line chunk count at 128 —
+        # unrolling 512+ chunk bodies made 32k-prefill counting compiles
+        # take tens of minutes, and the WKV share of rwkv6 FLOPs is ~1%
+        C = max(C, -(-T // 128))
+        C += (-C) % 16
+    pad = (-T) % C
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    Tp = T + pad
+    N = Tp // C
+
+    def to_chunks(a):
+        return a.reshape(B, N, C, H, hd).transpose(1, 0, 3, 2, 4)  # [N,B,H,C,hd]
+
+    r_, k_, v_ = to_chunks(r).astype(jnp.float32), to_chunks(k).astype(
+        jnp.float32), to_chunks(v).astype(jnp.float32)
+    logw = jnp.log(jnp.clip(to_chunks(w).astype(jnp.float32), 1e-8, 1.0))
+    lc = jnp.cumsum(logw, axis=3)                       # [N,B,H,C,hd]
+    lc_total = lc[:, :, :, -1:, :]                      # [N,B,H,1,hd]
+
+    tri = jnp.tril(jnp.ones((C, C), dtype=bool), k=-1)  # strict lower
+
+    @jax.checkpoint
+    def body(S, xs):
+        # rematerialized: the [B,H,C,C,hd] pairwise-decay tensor would
+        # otherwise be stacked across all T/C chunks by the scan backward
+        # (10 GiB for rwkv6-3b train_4k)
+        rc, kc, vc, lcc, lwc, lct = xs
+        # inter-chunk: y_t += (r_t * prod_{u<=t-1} w_u) @ S
+        rdec = rc * jnp.exp(lcc - lwc)                  # exp(lc_{t-1})
+        y_inter = jnp.einsum("bhtd,bhdv->bhtv", rdec, S)
+        # intra-chunk pairwise decays, log-space (always <= 0 for s < t)
+        ldiff = (lcc - lwc)[:, :, :, None, :] - lcc[:, :, None, :, :]
+        pair = jnp.exp(jnp.where(tri[None, None, :, :, None], ldiff, -1e30))
+        A = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rc, kc, pair)
+        diag = jnp.einsum("bhtd,hd,bhtd->bht", rc, u.astype(jnp.float32), kc)
+        A = A + diag[..., None] * jnp.eye(C)[None, None]
+        y_intra = jnp.einsum("bhts,bhsv->bhtv", A, vc)
+        # state to next chunk
+        kdec = kc * jnp.exp(lct - lcc)
+        S_new = jnp.einsum("bhtd,bhtv->bhdv", kdec, vc) \
+            + jnp.exp(lct)[:, :, 0, :, None] * S
+        return S_new, y_inter + y_intra
+
+    xs = (r_, k_, v_, lc, logw, lc_total)
+    if unroll:   # cost-accounting: straight-line HLO (see configs.base)
+        S_cur = state.astype(jnp.float32)
+        ys_list = []
+        for ci in range(N):
+            S_cur, y_c = body(S_cur, jax.tree.map(lambda a: a[ci], xs))
+            ys_list.append(y_c)
+        S_final, ys = S_cur, jnp.stack(ys_list)
+    else:
+        S_final, ys = jax.lax.scan(body, state.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, Tp, H, hd)[:, :T]
+    return y.astype(r.dtype), S_final
+
+
+def wkv_step(r, k, v, w, u, state):
+    """Single decode step. r,k,v,w [B,H,hd]; state [B,H,hd,hd] f32."""
+    r, k, v, w = (a.astype(jnp.float32) for a in (r, k, v, w))
+    y = jnp.einsum("bhd,bhdv->bhv", r, state) \
+        + jnp.einsum("bhd,hd,bhd->bh", r, u.astype(jnp.float32),
+                     k)[..., None] * v
+    state = w[..., None] * state + jnp.einsum("bhd,bhv->bhdv", k, v)
+    return y, state
+
+
+def time_mix(p, cfg: ModelConfig, x, shift_state, wkv_state,
+             ctx: Optional[ShardingCtx] = None):
+    """x [B,T,d] -> (y, new_shift [B,d], new_wkv_state)."""
+    B, T, d = x.shape
+    H, hd = cfg.num_heads, cfg.rwkv_head_dim
+    prev = _token_shift(x, shift_state)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, prev)
+
+    def heads(a):
+        return a.reshape(B, T, H, hd)
+
+    r = heads(xr @ p["W_r"])
+    k = heads(xk @ p["W_k"])
+    v = heads(xv @ p["W_v"])
+    g = jax.nn.silu(xg @ p["W_g"])
+    w_raw = p["w_base"] + jnp.tanh(xw @ p["w_A"]).astype(jnp.float32) \
+        @ p["w_B"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(w_raw, -8.0, 1.0)))   # decay in (0,1)
+    w = heads(w)
+    r = constrain(r, ctx, "batch", None, "model", None)
+
+    y, wkv_state = wkv_chunked(r, k, v, w, p["u"], wkv_state,
+                               unroll=cfg.unroll_for_costing)
+    y = y.reshape(B, T, H * hd)
+    y = group_norm(y, H, scale=p["gn_scale"], bias=p["gn_bias"])
+    y = (y * g) @ p["W_o"]
+    return y, x[:, -1], wkv_state
+
+
+def time_mix_step(p, cfg: ModelConfig, x, shift_state, wkv_state):
+    """Decode: x [B,1,d]."""
+    B, _, d = x.shape
+    H, hd = cfg.num_heads, cfg.rwkv_head_dim
+    prev = shift_state[:, None, :]
+    xr, xk, xv, xw, xg = _ddlerp(p, x, prev)
+    sq = lambda a: a.reshape(B, H, hd)
+    r, k, v = sq(xr @ p["W_r"]), sq(xk @ p["W_k"]), sq(xv @ p["W_v"])
+    g = jax.nn.silu(xg @ p["W_g"])[:, 0]
+    w_raw = p["w_base"] + jnp.tanh(xw @ p["w_A"]).astype(jnp.float32) \
+        @ p["w_B"].astype(jnp.float32)
+    w = sq(jnp.exp(-jnp.exp(jnp.clip(w_raw, -8.0, 1.0))))
+    y, wkv_state = wkv_step(r, k, v, w, p["u"], wkv_state)
+    y = y.reshape(B, H * hd).astype(x.dtype)
+    y = group_norm(y, H, scale=p["gn_scale"], bias=p["gn_bias"])
+    y = (y * g) @ p["W_o"]
+    return y[:, None, :], x[:, -1], wkv_state
+
+
+def channel_mix(p, x, shift_state, ctx: Optional[ShardingCtx] = None):
+    prev = _token_shift(x, shift_state)
+    sx = prev - x
+    xk = x + sx * p["maa_k"]
+    xr = x + sx * p["maa_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["W_k"]))
+    kk = constrain(kk, ctx, "batch", None, "sp")
+    out = jax.nn.sigmoid(xr @ p["W_r"]) * (kk @ p["W_v"])
+    return out, x[:, -1]

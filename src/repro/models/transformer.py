@@ -1,0 +1,513 @@
+"""Unified decoder for every assigned architecture family.
+
+Layer heterogeneity (gemma3 5:1 local:global, Griffin 2:1 recurrent:attn,
+Llama-Vision 4:1 self:cross) is handled by scanning over *pattern periods*:
+parameters of one period are initialized per-layer-kind and stacked across
+the ``num_full_periods`` repetitions, so the HLO contains each layer kind
+once regardless of depth — essential for the 512-device AOT dry-run's
+compile time.  Remainder layers (62 = 10x6 + 2) are applied unrolled.
+
+Public API (functional):
+    init(key, cfg)                                  -> params
+    forward(params, cfg, batch, ctx, collect_cache) -> (logits, aux, cache)
+    loss_fn(params, cfg, batch, ctx)                -> (loss, metrics)
+    init_cache(cfg, batch_size, cache_len)          -> cache pytree
+    serve_step(params, cfg, cache, batch, ctx)      -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (CROSS_ATTN, GLOBAL_ATTN, LOCAL_ATTN,
+                                RECURRENT, RWKV, ModelConfig)
+from repro.sharding import ShardingCtx, constrain
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import rwkv6 as W
+
+ATTN_KINDS = (GLOBAL_ATTN, LOCAL_ATTN, CROSS_ATTN)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def init_layer(key, cfg: ModelConfig, kind: str):
+    dt = _pdtype(cfg)
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    if kind == RWKV:
+        return {
+            "ln1": W.layer_norm_init(d, dt),
+            "tm": W.time_mix_init(k1, cfg, dt),
+            "ln2": W.layer_norm_init(d, dt),
+            "cm": W.channel_mix_init(k2, cfg, dt),
+        }
+    p = {"norm1": L.rms_norm_init(d, dt), "norm2": L.rms_norm_init(d, dt)}
+    if kind == RECURRENT:
+        p["rec"] = R.recurrent_block_init(k1, cfg, dt)
+        p["ffn"] = L.swiglu_init(k2, d, cfg.d_ff, dt)
+    else:
+        p["attn"] = L.attention_params_init(k1, cfg, dt,
+                                            cross=(kind == CROSS_ATTN))
+        if cfg.num_experts:
+            p["ffn"] = M.moe_params_init(k2, cfg, dt)
+        else:
+            p["ffn"] = L.swiglu_init(k2, d, cfg.d_ff, dt)
+    return p
+
+
+def init_period(key, cfg: ModelConfig):
+    keys = jax.random.split(key, cfg.pattern_period)
+    return {f"layer{i}": init_layer(keys[i], cfg, kind)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def init(key, cfg: ModelConfig):
+    dt = _pdtype(cfg)
+    keys = jax.random.split(key, 6 + cfg.num_remainder_layers)
+    params = {}
+    if cfg.family == "audio":
+        params["embed_proj"] = L.dense_init(
+            keys[0], (cfg.encoder_dim, cfg.d_model), dtype=dt)
+    else:
+        params["embed"] = L.embed_init(
+            keys[0], (cfg.vocab_size, cfg.d_model), dtype=dt)
+    if cfg.family == "vlm" and cfg.encoder_dim != cfg.d_model:
+        params["enc_proj"] = L.dense_init(
+            keys[1], (cfg.encoder_dim, cfg.d_model), dtype=dt)
+
+    nper = cfg.num_full_periods
+    if nper:
+        pkeys = jax.random.split(keys[2], nper)
+        params["blocks"] = jax.vmap(
+            lambda k: init_period(k, cfg))(pkeys)
+    for i in range(cfg.num_remainder_layers):
+        params[f"rem{i}"] = init_layer(keys[6 + i], cfg,
+                                       cfg.block_pattern[i])
+    params["final_norm"] = (W.layer_norm_init(cfg.d_model, dt)
+                            if RWKV in cfg.block_pattern
+                            else L.rms_norm_init(cfg.d_model, dt))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            keys[3], (cfg.d_model, cfg.vocab_size), dtype=dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# per-layer state (decode cache / recurrent state)
+
+
+def init_layer_state(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    dt = _dtype(cfg)
+    if kind == GLOBAL_ATTN:
+        n = cache_len
+    elif kind == LOCAL_ATTN:
+        n = min(cfg.window_size, cache_len)
+    elif kind == CROSS_ATTN:
+        return {"k": jnp.zeros((batch, cfg.num_encoder_tokens, KV, hd), dt),
+                "v": jnp.zeros((batch, cfg.num_encoder_tokens, KV, hd), dt)}
+    elif kind == RECURRENT:
+        return R.init_recurrent_state(cfg, batch)
+    elif kind == RWKV:
+        H = cfg.num_heads
+        rhd = cfg.rwkv_head_dim
+        return {"shift1": jnp.zeros((batch, cfg.d_model), dt),
+                "shift2": jnp.zeros((batch, cfg.d_model), dt),
+                "wkv": jnp.zeros((batch, H, rhd, rhd), jnp.float32)}
+    else:
+        raise ValueError(kind)
+    return {"k": jnp.zeros((batch, n, KV, hd), dt),
+            "v": jnp.zeros((batch, n, KV, hd), dt),
+            "slot_pos": jnp.full((n,), -1, jnp.int32),
+            "next_slot": jnp.zeros((), jnp.int32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Decode cache for the whole model (stacked over periods)."""
+    def period_state():
+        return {f"layer{i}": init_layer_state(cfg, kind, batch, cache_len)
+                for i, kind in enumerate(cfg.block_pattern)}
+    cache = {}
+    nper = cfg.num_full_periods
+    if nper:
+        one = period_state()
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (nper,) + x.shape).copy(), one)
+    for i in range(cfg.num_remainder_layers):
+        cache[f"rem{i}"] = init_layer_state(cfg, cfg.block_pattern[i],
+                                            batch, cache_len)
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# layer application
+
+
+def apply_layer(p, cfg: ModelConfig, kind: str, x, *, enc=None, q_pos=None,
+                ctx=None, state=None, decode=False, collect_cache=False,
+                cache_len: int = 0):
+    """Returns (x, aux_loss, new_state).
+
+    The residual stream is kept sequence-sharded over the tensor-parallel
+    axis between layers (Megatron-LM sequence parallelism): the scan over
+    periods then stores only a 1/TP-degree slice per layer for backward —
+    the difference between fitting and not fitting 4k-seq training in HBM
+    (DESIGN.md §3)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_state = state
+    x = constrain(x, ctx, "batch", "sp", None)
+
+    if kind == RWKV:
+        h = W.layer_norm(p["ln1"], x)
+        if decode:
+            y, s1, wkv = W.time_mix_step(p["tm"], cfg, h, state["shift1"],
+                                         state["wkv"])
+        else:
+            B = x.shape[0]
+            s1_0 = jnp.zeros((B, cfg.d_model), x.dtype) if state is None \
+                else state["shift1"]
+            wkv_0 = jnp.zeros((B, cfg.num_heads, cfg.rwkv_head_dim,
+                               cfg.rwkv_head_dim), jnp.float32) \
+                if state is None else state["wkv"]
+            y, s1, wkv = W.time_mix(p["tm"], cfg, h, s1_0, wkv_0, ctx)
+        x = x + y
+        h = W.layer_norm(p["ln2"], x)
+        s2_0 = (jnp.zeros((x.shape[0], cfg.d_model), x.dtype)
+                if (state is None and not decode) else
+                (state["shift2"] if state is not None else None))
+        y, s2 = W.channel_mix(p["cm"], h, s2_0, ctx)
+        x = x + y
+        if collect_cache or decode:
+            new_state = {"shift1": s1.astype(_dtype(cfg)),
+                         "shift2": s2.astype(_dtype(cfg)), "wkv": wkv}
+        return x, aux, new_state
+
+    if kind == RECURRENT:
+        h = L.rms_norm(p["norm1"], x)
+        s0 = R.init_recurrent_state(cfg, x.shape[0]) if state is None else state
+        y, s = R.recurrent_block(p["rec"], cfg, h, s0, ctx, decode=decode)
+        x = x + y
+        x = x + L.swiglu(p["ffn"], L.rms_norm(p["norm2"], x), ctx,
+                         act=jax.nn.gelu)
+        return x, aux, (s if (collect_cache or decode) else state)
+
+    # attention kinds -------------------------------------------------
+    h = L.rms_norm(p["norm1"], x)
+    window = cfg.window_size if kind == LOCAL_ATTN else 0
+    theta = (cfg.rope_theta_local if kind == LOCAL_ATTN else cfg.rope_theta)
+    if kind == CROSS_ATTN:
+        if decode:
+            y, _, _ = L.multihead_attention(
+                p["attn"], cfg, h, q_pos=None, causal=False, ctx=ctx,
+                cache=state, cache_fixed_kv=True)
+        else:
+            y, _, kv = L.multihead_attention(
+                p["attn"], cfg, h, kv_x=enc, q_pos=None, causal=False,
+                ctx=ctx)
+            if collect_cache:
+                new_state = {"k": kv[0], "v": kv[1]}
+    elif decode:
+        y, new_state, _ = L.multihead_attention(
+            p["attn"], cfg, h, q_pos=q_pos, causal=True, window=window,
+            rope_theta=theta, ctx=ctx, cache=state)
+    else:
+        y, _, kv = L.multihead_attention(
+            p["attn"], cfg, h, q_pos=q_pos, causal=True, window=window,
+            rope_theta=theta, ctx=ctx)
+        if collect_cache:
+            new_state = _prefill_cache(cfg, kind, kv, q_pos, cache_len)
+    x = x + y
+
+    h = L.rms_norm(p["norm2"], x)
+    if cfg.num_experts and kind != CROSS_ATTN:
+        y, aux = M.moe_ffn(p["ffn"], cfg, h, ctx)
+    elif cfg.num_experts:
+        y, aux = M.moe_ffn(p["ffn"], cfg, h, ctx)
+    else:
+        y = L.swiglu(p["ffn"], h, ctx)
+    x = x + y
+    return x, aux, new_state
+
+
+def _prefill_cache(cfg: ModelConfig, kind: str, kv, q_pos, cache_len: int):
+    """Pack prefill-computed KV into a decode cache buffer."""
+    k, v = kv
+    B, S = k.shape[0], k.shape[1]
+    if kind == LOCAL_ATTN:
+        n = min(cfg.window_size, cache_len)
+    else:
+        n = cache_len
+    pos = jnp.broadcast_to(q_pos, (B, S))[0] if q_pos is not None \
+        else jnp.arange(S)
+    if S >= n:
+        k, v, pos = k[:, -n:], v[:, -n:], pos[-n:]
+        next_slot = jnp.zeros((), jnp.int32)
+        slot_pos = pos.astype(jnp.int32)
+    else:
+        padn = n - S
+        k = jnp.pad(k, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        slot_pos = jnp.concatenate(
+            [pos.astype(jnp.int32), jnp.full((padn,), -1, jnp.int32)])
+        next_slot = jnp.array(S % n, jnp.int32)
+    return {"k": k, "v": v, "slot_pos": slot_pos,
+            "next_slot": next_slot}
+
+
+# ---------------------------------------------------------------------------
+# trunk
+
+
+def _embed(params, cfg: ModelConfig, batch, ctx):
+    dt = _dtype(cfg)
+    if cfg.family == "audio":
+        x = batch["frame_embeddings"].astype(dt) @ params["embed_proj"]
+    else:
+        x = params["embed"][batch["tokens"]].astype(dt)
+    x = x * jnp.asarray(jnp.sqrt(cfg.d_model), dt)
+    if cfg.pos_embedding == "sinusoidal":
+        S = x.shape[1]
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.arange(S)[None, :]
+        x = x + L.sinusoidal_pos(pos, cfg.d_model).astype(dt)
+    return constrain(x, ctx, "batch", "sp", None)
+
+
+def _encoder_states(params, cfg: ModelConfig, batch, ctx):
+    if cfg.family != "vlm":
+        return None
+    enc = batch["encoder_embeddings"].astype(_dtype(cfg))
+    if "enc_proj" in params:
+        enc = enc @ params["enc_proj"]
+    return constrain(enc, ctx, "batch", None, None)
+
+
+def _head(params, cfg: ModelConfig, x, ctx):
+    xn = (W.layer_norm(params["final_norm"], x)
+          if RWKV in cfg.block_pattern
+          else L.rms_norm(params["final_norm"], x))
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # explicit upcast (not preferred_element_type): keeps the residual
+    # cotangent bf16 — see layers._attend
+    logits = jnp.einsum("bsd,dv->bsv", xn.astype(jnp.float32),
+                        head.astype(jnp.float32))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    # vocab column-parallel in BOTH sharding modes ("sp" always resolves
+    # to the model axis): unsharded f32 logits are 37 GiB for train_4k
+    return constrain(logits, ctx, "batch", None, "sp")
+
+
+def forward(params, cfg: ModelConfig, batch, ctx: Optional[ShardingCtx] = None,
+            collect_cache: bool = False, cache_len: int = 0):
+    """Full-sequence forward. Returns (logits, aux, cache-or-None)."""
+    x = _embed(params, cfg, batch, ctx)
+    enc = _encoder_states(params, cfg, batch, ctx)
+    B, S = x.shape[0], x.shape[1]
+    q_pos = jnp.arange(S)[None, :]
+    period = cfg.pattern_period
+
+    def one_layer(kind):
+        def fn(lp, x):
+            return apply_layer(
+                lp, cfg, kind, x, enc=enc, q_pos=q_pos, ctx=ctx, state=None,
+                decode=False, collect_cache=collect_cache,
+                cache_len=cache_len)
+        # remat each LAYER (not the whole period): backward then holds one
+        # layer's transients at a time — a 6-layer gemma3 period body kept
+        # ~50 GiB of f32 transients live otherwise.  (prevent_cse stays at
+        # its default True: =False let CSE defeat remat, +45% temp memory —
+        # refuted hypothesis, see EXPERIMENTS.md §Perf.)
+        return (jax.checkpoint(fn) if cfg.remat else fn)
+
+    layer_fns = [one_layer(kind) for kind in cfg.block_pattern]
+
+    def run_period(x_aux, pparams):
+        x, aux = x_aux
+        states = {}
+        for i in range(len(cfg.block_pattern)):
+            x, a, st = layer_fns[i](pparams[f"layer{i}"], x)
+            aux = aux + a
+            states[f"layer{i}"] = st
+        return (x, aux), states
+
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    if cfg.num_full_periods and cfg.unroll_for_costing:
+        states_list = []
+        xa = (x, aux)
+        for pi in range(cfg.num_full_periods):
+            pparams = jax.tree.map(lambda l: l[pi], params["blocks"])
+            xa, st = run_period(xa, pparams)
+            states_list.append(st)
+        (x, aux) = xa
+        if collect_cache:
+            cache["blocks"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *states_list)
+    elif cfg.num_full_periods:
+        (x, aux), period_states = jax.lax.scan(
+            run_period, (x, aux), params["blocks"])
+        if collect_cache:
+            cache["blocks"] = period_states
+    for i in range(cfg.num_remainder_layers):
+        kind = cfg.block_pattern[i]
+        x, a, st = apply_layer(
+            params[f"rem{i}"], cfg, kind, x, enc=enc, q_pos=q_pos, ctx=ctx,
+            collect_cache=collect_cache, cache_len=cache_len)
+        aux = aux + a
+        if collect_cache:
+            cache[f"rem{i}"] = st
+    logits = _head(params, cfg, x, ctx)
+    if collect_cache:
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return logits, aux, cache
+    return logits, aux, None
+
+
+CE_CHUNK = 512
+
+
+def loss_fn(params, cfg: ModelConfig, batch,
+            ctx: Optional[ShardingCtx] = None, label_smoothing: float = 0.0):
+    S = batch["targets"].shape[1]
+    big = S * cfg.vocab_size > (1 << 24)
+    if big and not cfg.unroll_for_costing:
+        # chunked head+CE: full [B, S, V] f32 logits (and their backward
+        # copies: probs, the head-grad transpose) were 3-4 x 4.3 GiB live
+        # buffers for gemma3 train_4k — §Perf pair 2
+        x, aux = forward_hidden(params, cfg, batch, ctx)
+        loss = _chunked_ce(params, cfg, x, batch["targets"],
+                           batch.get("loss_mask"), ctx, label_smoothing)
+    else:
+        logits, aux, _ = forward(params, cfg, batch, ctx)
+        loss = L.softmax_cross_entropy(
+            logits, batch["targets"], batch.get("loss_mask"),
+            label_smoothing)
+    total = loss + aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+def forward_hidden(params, cfg: ModelConfig, batch, ctx=None):
+    """Trunk only: final *hidden* (pre-head) + aux loss."""
+    logits_unused = None
+    x = _embed(params, cfg, batch, ctx)
+    enc = _encoder_states(params, cfg, batch, ctx)
+    q_pos = jnp.arange(x.shape[1])[None, :]
+
+    def one_layer(kind):
+        def fn(lp, x):
+            return apply_layer(lp, cfg, kind, x, enc=enc, q_pos=q_pos,
+                               ctx=ctx)
+        return jax.checkpoint(fn) if cfg.remat else fn
+
+    layer_fns = [one_layer(kind) for kind in cfg.block_pattern]
+
+    def run_period(x_aux, pparams):
+        x, aux = x_aux
+        for i in range(len(cfg.block_pattern)):
+            x, a, _ = layer_fns[i](pparams[f"layer{i}"], x)
+            aux = aux + a
+        return (x, aux), None
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.num_full_periods:
+        (x, aux), _ = jax.lax.scan(run_period, (x, aux), params["blocks"])
+    for i in range(cfg.num_remainder_layers):
+        x, a, _ = apply_layer(params[f"rem{i}"], cfg,
+                              cfg.block_pattern[i], x, enc=enc,
+                              q_pos=q_pos, ctx=ctx)
+        aux = aux + a
+    return x, aux
+
+
+def _chunked_ce(params, cfg: ModelConfig, x, targets, mask, ctx,
+                label_smoothing: float, chunk: int = CE_CHUNK):
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask if mask is not None
+                       else jnp.ones((B, S), jnp.float32),
+                       ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    n = (S + pad) // chunk
+
+    def to_chunks(a):
+        return a.reshape((B, n, chunk) + a.shape[2:]).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(args):
+        xi, ti, mi = args
+        logits = _head(params, cfg, xi, ctx)
+        return L.softmax_cross_entropy_sums(logits, ti, mi, label_smoothing)
+
+    sums, wsums = jax.lax.map(body, (to_chunks(x), to_chunks(targets),
+                                     to_chunks(mask)))
+    return sums.sum() / jnp.maximum(wsums.sum(), 1.0)
+
+
+def serve_step(params, cfg: ModelConfig, cache, batch,
+               ctx: Optional[ShardingCtx] = None):
+    """One decode step: batch['tokens'] [B,1] (audio: frame_embeddings).
+    Returns (logits [B,1,V], new cache)."""
+    x = _embed(params, cfg,
+               {**batch, "positions": cache["pos"][None, None]}, ctx)
+    B = x.shape[0]
+    pos = cache["pos"]
+    q_pos = jnp.full((B, 1), pos, jnp.int32)
+
+    def run_period(x, scanned):
+        pparams, pstate = scanned
+        new_states = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            xx, _, st = apply_layer(
+                pparams[f"layer{i}"], cfg, kind, x, q_pos=q_pos, ctx=ctx,
+                state=pstate[f"layer{i}"], decode=True)
+            x = xx
+            new_states[f"layer{i}"] = st
+        return x, new_states
+
+    new_cache = {}
+    if cfg.num_full_periods and cfg.unroll_for_costing:
+        states_list = []
+        for pi in range(cfg.num_full_periods):
+            scanned = jax.tree.map(lambda l: l[pi],
+                                   (params["blocks"], cache["blocks"]))
+            x, st = run_period(x, scanned)
+            states_list.append(st)
+        new_cache["blocks"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *states_list)
+    elif cfg.num_full_periods:
+        x, states = jax.lax.scan(
+            run_period, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = states
+    for i in range(cfg.num_remainder_layers):
+        kind = cfg.block_pattern[i]
+        x, _, st = apply_layer(
+            params[f"rem{i}"], cfg, kind, x, q_pos=q_pos, ctx=ctx,
+            state=cache[f"rem{i}"], decode=True)
+        new_cache[f"rem{i}"] = st
+    new_cache["pos"] = pos + 1
+    logits = _head(params, cfg, x, ctx)
+    return logits, new_cache

@@ -1,0 +1,75 @@
+"""Minimal functional optimizers (optax-style, no external deps).
+
+FedAvg's local update (paper Eq. 1) is plain SGD; momentum / AdamW are
+provided for the non-federated training drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (updates, state)
+
+
+def sgd(learning_rate: float, momentum: float = 0.0,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, params)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -learning_rate * g, grads), state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        return jax.tree.map(lambda m: -learning_rate * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(learning_rate: float, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], g32)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         state["v"], g32)
+        mh = jax.tree.map(lambda m: m / (1 - b1 ** t.astype(jnp.float32)), m)
+        vh = jax.tree.map(lambda v: v / (1 - b2 ** t.astype(jnp.float32)), v)
+        upd = jax.tree.map(
+            lambda mh, vh, p: (-learning_rate
+                               * (mh / (jnp.sqrt(vh) + eps)
+                                  + weight_decay * p.astype(jnp.float32))
+                               ).astype(p.dtype),
+            mh, vh, params)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def make_optimizer(name: str, learning_rate: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(learning_rate, **kw)
+    if name == "adamw":
+        return adamw(learning_rate, **kw)
+    raise ValueError(name)

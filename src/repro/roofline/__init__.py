@@ -1,0 +1,10 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    Roofline,
+    collective_bytes_from_hlo,
+    count_params,
+    model_flops,
+    roofline_terms,
+)

@@ -1,0 +1,98 @@
+"""Sharding context threaded through model code.
+
+The model zoo is mesh-agnostic: every apply() takes an optional
+``ShardingCtx``.  With ``ctx=None`` (CPU smoke tests, single-device FL
+simulation) no constraint is emitted and MoE layers run all experts
+locally.  Under the production mesh the launcher passes a ctx naming the
+mesh axes; models emit ``with_sharding_constraint`` on activations and the
+MoE layer runs expert-parallel under ``jax.shard_map``.
+
+Axis convention (see DESIGN.md §3):
+  pod   — FL silo axis (multi-pod mesh only): FedCGD aggregation axis
+  data  — batch / FSDP axis inside a silo
+  model — tensor-parallel axis (heads / d_ff / experts / vocab);
+          for architectures whose head counts do not divide the axis
+          (tp=False) it instead carries sequence parallelism + param
+          storage sharding (ZeRO-3 style)
+
+Spec sentinels understood by ``constrain``:
+  "batch"  -> ctx.batch_axes
+  "model"  -> ctx.model_axis if ctx.tp else None   (TP dims: heads, d_ff)
+  "sp"     -> ctx.model_axis                       (sequence parallelism)
+  "seq"    -> ctx.seq_axes                         (decode KV-cache length)
+  "fsdp"   -> ctx.fsdp_axes
+Axes whose size does not divide the dim are dropped automatically, so the
+same model code works for reduced smoke configs and 512-chip dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Optional[Mesh]
+    batch_axes: Tuple[str, ...] = ("data",)   # activations' batch dim
+    model_axis: Optional[str] = "model"       # tensor parallel axis
+    fsdp_axes: Tuple[str, ...] = ()           # param sharding for big tables
+    seq_axes: Tuple[str, ...] = ()            # long-context KV cache axis
+    tp: bool = True                           # Megatron TP (heads divide)
+    # §Perf opt: odd-head archs replicate attention weights (token-
+    # parallel attention projections, zero collectives) and col/row-shard
+    # the MLP over 'model', instead of ZeRO-3 gathering every layer
+    hybrid: bool = False
+
+    @property
+    def model_axis_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def axis_size(self, axes: Tuple[str, ...]) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def resolve(self, s):
+        if s == "batch":
+            return self.batch_axes
+        if s == "model":
+            return self.model_axis if self.tp else None
+        if s == "sp":
+            return self.model_axis
+        if s == "seq":
+            return self.seq_axes
+        if s == "fsdp":
+            return self.fsdp_axes
+        return s
+
+
+def constrain(x, ctx: Optional[ShardingCtx], *spec):
+    """with_sharding_constraint if a mesh is active, else identity."""
+    if ctx is None or ctx.mesh is None:
+        return x
+    resolved = []
+    used = set()
+    for dim, s in zip(x.shape, spec):
+        s = ctx.resolve(s)
+        if s is None or s == ():
+            resolved.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        # a mesh axis may appear only once per spec: first dim wins
+        axes = tuple(a for a in axes if a not in used)
+        size = ctx.axis_size(axes)
+        if not axes or size == 0 or dim % max(size, 1) != 0:
+            resolved.append(None)
+        else:
+            used.update(axes)
+            resolved.append(axes if len(axes) > 1 else axes[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*resolved)))

@@ -1,0 +1,85 @@
+"""Wireless substrate: Eq. 9 bandwidth + TR 38.901 channel."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandwidth import (min_bandwidth, min_bandwidth_bisect,
+                                  uplink_rate)
+from repro.wireless.channel import (ChannelParams, los_probability, make_cell,
+                                    path_loss_db)
+
+N0 = 10 ** ((-174 + 6) / 10) * 1e-3   # noise psd + noise figure, W/Hz
+
+
+@given(st.floats(-13, -7), st.floats(0.1, 10), st.floats(4, 8))
+@settings(max_examples=60, deadline=None)
+def test_lambertw_matches_bisect(log_sh, deadline, log_bits):
+    sh, bits = 10 ** log_sh, 10 ** log_bits
+    bw = min_bandwidth(bits, deadline, np.array([sh]), N0)[0]
+    ref = min_bandwidth_bisect(bits, deadline, sh, N0)
+    if ref < 0:
+        assert bw < 0
+    else:
+        assert abs(bw - ref) / ref < 1e-5
+
+
+@given(st.floats(-12, -8))
+@settings(max_examples=30, deadline=None)
+def test_minimum_bandwidth_achieves_rate(log_sh):
+    sh = 10 ** log_sh
+    bits, deadline = 1e6, 2.0
+    bw = min_bandwidth(bits, deadline, np.array([sh]), N0)[0]
+    if bw > 0:
+        rate = uplink_rate(bw, sh, N0)
+        assert rate * deadline >= bits * (1 - 1e-6)
+        # strictly minimal: 1% less bandwidth must miss the deadline
+        assert uplink_rate(bw * 0.99, sh, N0) * deadline < bits
+
+
+def test_bandwidth_monotone_in_gain():
+    sh = np.logspace(-12, -8, 20)
+    bw = min_bandwidth(1e6, 2.0, sh, N0)
+    ok = bw[bw > 0]
+    assert (np.diff(ok) <= 1e-6).all()   # better channel -> less bandwidth
+
+
+def test_los_probability_bounds():
+    d = np.linspace(1, 1000, 200)
+    p = los_probability(d)
+    assert ((p >= 0) & (p <= 1)).all()
+    assert p[0] == 1.0                     # <=18 m is always LOS
+    assert p[-1] < 0.1
+
+
+def test_path_loss_monotone_distance():
+    d = np.linspace(10, 500, 100)
+    for los in (np.ones(100, bool), np.zeros(100, bool)):
+        pl = path_loss_db(d, 3.5, los)
+        assert (np.diff(pl) > 0).all()
+    # NLOS always lossier than LOS
+    assert (path_loss_db(d, 3.5, np.zeros(100, bool))
+            > path_loss_db(d, 3.5, np.ones(100, bool))).all()
+
+
+def test_cell_generation_and_gains():
+    rng = np.random.default_rng(0)
+    cell = make_cell(64, rng)
+    assert (cell.d2d <= cell.params.cell_radius_m + 1e-9).all()
+    gains = cell.draw_gains(rng)
+    assert (gains > 0).all() and (gains < 1).all()
+    rx = cell.received_power(gains)
+    # Table I: 23 dBm tx power
+    assert np.isclose(cell.params.tx_power_w, 0.1995, rtol=1e-3)
+    assert (rx < cell.params.tx_power_w).all()
+
+
+def test_paper_deadline_schedules_some_devices():
+    """With Table I parameters and a 2 s deadline, a 4-ish MB model is
+    uploadable by a reasonable fraction of a 64-device cell."""
+    rng = np.random.default_rng(1)
+    cell = make_cell(64, rng)
+    gains = cell.draw_gains(rng)
+    bits = 0.5e6 * 32            # ~0.5M params * 32 bit
+    bw = min_bandwidth(bits, 2.0, cell.received_power(gains),
+                       cell.params.noise_psd_w)
+    feasible = (bw > 0) & (bw <= cell.params.total_bandwidth_hz)
+    assert feasible.sum() >= 16

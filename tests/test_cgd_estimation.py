@@ -1,0 +1,118 @@
+"""Multi-level CGD instrumentation + parameter estimation (Sec. IV, V-C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cgd
+from repro.core import estimation as E
+
+
+def grads_from(vectors):
+    return [{"w": jnp.asarray(v)} for v in vectors]
+
+
+def test_collective_vs_individual_divergence():
+    """Remark 1 / Fig. 2: two 'bad' complementary devices can have lower
+    COLLECTIVE divergence than one 'good' device."""
+    gF = {"w": jnp.zeros(4)}
+    g1 = {"w": jnp.ones(4) * 0.3}            # small individual divergence
+    g2 = {"w": jnp.ones(4) * 2.0}            # big ...
+    g3 = {"w": -jnp.ones(4) * 2.0}           # ... but complementary
+    d = cgd.individual_divergences([g1, g2, g3], gF)
+    assert d[0] < d[1] and d[0] < d[2]
+    delta_23 = float(cgd.device_level_cgd([g2, g3], [0.5, 0.5], gF))
+    assert delta_23 < d[0]
+
+
+def test_full_participation_zero_cgd():
+    rng = np.random.default_rng(0)
+    gs = grads_from(rng.normal(size=(5, 6)))
+    alphas = np.ones(5) / 5
+    gF = {"w": jnp.mean(jnp.stack([g["w"] for g in gs]), axis=0)}
+    assert float(cgd.device_level_cgd(gs, alphas, gF)) < 1e-6
+
+
+def test_triangle_inequality_on_cgd():
+    rng = np.random.default_rng(1)
+    gs = grads_from(rng.normal(size=(4, 8)))
+    gF = {"w": jnp.asarray(rng.normal(size=8))}
+    alphas = np.ones(4) / 4
+    coll = float(cgd.device_level_cgd(gs, alphas, gF))
+    indiv = cgd.individual_divergences(gs, gF)
+    assert coll <= (alphas * indiv).sum() + 1e-6
+
+
+def test_theorem1_bound_dominates_terms():
+    b = cgd.theorem1_bound(delta=0.5, sigma=2.0, num_scheduled=4,
+                           batch_size=32, tau=3, eta=0.1, beta=1.0, g=5.0)
+    bias = cgd.local_iter_bias_bound(3, 0.1, 1.0, 5.0)
+    assert b >= bias
+    assert b >= 0.1 * 3 * 0.5
+
+
+def test_local_iter_bias_zero_for_tau1():
+    assert cgd.local_iter_bias_bound(1, 0.1, 1.0, 5.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# estimation
+
+
+def test_sigma_lastlayer_matches_exact_linear():
+    d, C, B = 12, 4, 32
+    W = jax.random.normal(jax.random.key(0), (d, C)) * 0.2
+    h = jax.random.normal(jax.random.key(1), (B, d))
+    y = jax.random.randint(jax.random.key(2), (B,), 0, C)
+
+    def loss_per_sample(params, ex):
+        hi, yi = ex
+        return -jax.nn.log_softmax(hi @ params)[yi]
+
+    exact = float(E.sigma_hat_exact(loss_per_sample, W, (h, y)))
+    ll = float(E.sigma_hat_lastlayer(h, h @ W, y))
+    assert abs(exact - ll) < 1e-4 * max(exact, 1)
+
+
+def test_sigma_lastlayer_kernel_path():
+    d, C, B = 16, 5, 64
+    h = jax.random.normal(jax.random.key(1), (B, d))
+    logits = jax.random.normal(jax.random.key(2), (B, C))
+    y = jax.random.randint(jax.random.key(3), (B,), 0, C)
+    a = float(E.sigma_hat_lastlayer(h, logits, y))
+    b = float(E.sigma_hat_lastlayer(h, logits, y, use_kernel=True))
+    assert abs(a - b) < 1e-3 * max(a, 1)
+
+
+def test_sigma_global_aggregation():
+    sig = np.array([1.0, 2.0, 3.0])
+    alpha = np.ones(3) / 3
+    expect = np.sqrt((1 + 4 + 9) / 3)
+    assert abs(E.sigma_hat_global(sig, alpha) - expect) < 1e-9
+
+
+def test_g_hat_recovers_scale():
+    """Devices whose gradient offset is proportional to their label-
+    distribution L1 distance: G-hat should recover the proportionality."""
+    rng = np.random.default_rng(0)
+    C = 4
+    p_dev = np.eye(C)                       # single-class devices
+    gd = np.ones(C) / C
+    G_true = 2.5
+    base = rng.normal(size=8)
+    grads = []
+    for v in range(C):
+        l1 = np.abs(p_dev[v] - gd).sum()
+        direction = np.zeros(8)
+        direction[v % 8] = 1.0
+        grads.append({"w": jnp.asarray(base + G_true * l1 * direction)})
+    alphas = np.ones(C) / C
+    ghat = E.g_hat(grads, alphas, p_dev, gd)
+    # the estimator measures ||grad_v - mean||/l1 <= G_true (and > 0)
+    assert 0.5 * G_true < ghat <= G_true * 1.5
+
+
+def test_device_grad_estimate():
+    old = {"w": jnp.ones(3)}
+    new = {"w": jnp.ones(3) - 0.2}
+    g = E.device_grad_estimate(new, old, tau=2, eta=0.1)
+    np.testing.assert_allclose(g["w"], jnp.ones(3), atol=1e-6)

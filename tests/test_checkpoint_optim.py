@@ -1,0 +1,82 @@
+"""Checkpointing + optimizers."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.optim import adamw, make_optimizer, sgd
+from repro.optim.optimizers import apply_updates
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save_pytree(path, tree, metadata={"step": 3})
+        back = load_pytree(path, tree)
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(x, y)
+        assert os.path.exists(path + ".meta.json")
+
+
+def test_checkpoint_model_params():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen2-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "m.npz")
+        save_pytree(path, params)
+        back = load_pytree(path, params)
+        batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
+                 "targets": jnp.zeros((1, 8), jnp.int32)}
+        l1, _ = model.loss_fn(params, batch)
+        l2, _ = model.loss_fn(back, batch)
+        assert abs(float(l1) - float(l2)) < 1e-6
+
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2)
+
+
+def test_sgd_converges():
+    opt = sgd(0.1)
+    p = {"w": jnp.zeros(4)}
+    state = opt.init(p)
+    for _ in range(100):
+        g = jax.grad(quad_loss)(p)
+        upd, state = opt.update(g, state, p)
+        p = apply_updates(p, upd)
+    assert float(quad_loss(p)) < 1e-6
+
+
+def test_sgd_momentum_converges():
+    opt = sgd(0.05, momentum=0.9)
+    p = {"w": jnp.zeros(4)}
+    state = opt.init(p)
+    for _ in range(200):
+        g = jax.grad(quad_loss)(p)
+        upd, state = opt.update(g, state, p)
+        p = apply_updates(p, upd)
+    assert float(quad_loss(p)) < 1e-4
+
+
+def test_adamw_converges():
+    opt = adamw(0.1)
+    p = {"w": jnp.zeros(4)}
+    state = opt.init(p)
+    for _ in range(300):
+        g = jax.grad(quad_loss)(p)
+        upd, state = opt.update(g, state, p)
+        p = apply_updates(p, upd)
+    assert float(quad_loss(p)) < 1e-4
+
+
+def test_make_optimizer():
+    assert make_optimizer("sgd", 0.1)
+    assert make_optimizer("adamw", 0.001)

@@ -1,0 +1,111 @@
+"""Per-kernel allclose vs the pure-jnp oracles, sweeping shapes/dtypes
+(interpret=True executes the exact TPU kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.persample_gradnorm import persample_gradnorm_pallas
+from repro.kernels.rglru_scan import rglru_pallas
+from repro.kernels.rwkv_scan import wkv_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def randn(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+@pytest.mark.parametrize("B,H,S,T,hd", [
+    (2, 3, 128, 128, 64), (1, 2, 256, 256, 64), (2, 2, 100, 100, 32),
+    (1, 2, 64, 192, 64), (1, 1, 128, 128, 128), (1, 1, 257, 257, 64)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32), (False, 0)])
+def test_flash_attention_shapes(B, H, S, T, hd, causal, window):
+    q, k, v = randn((B, H, S, hd)), randn((B, H, T, hd)), randn((B, H, T, hd))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, expect, atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 3e-5),
+                                        (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, atol):
+    q = randn((1, 2, 128, 64), dtype)
+    k = randn((1, 2, 128, 64), dtype)
+    v = randn((1, 2, 128, 64), dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=atol, rtol=3e-2)
+
+
+@pytest.mark.parametrize("B,T,H,hd", [(2, 48, 3, 32), (1, 16, 2, 64),
+                                      (2, 100, 2, 16), (1, 64, 1, 64)])
+def test_wkv_kernel(B, T, H, hd):
+    r = randn((B, T, H, hd))
+    k = randn((B, T, H, hd), scale=0.3)
+    v = randn((B, T, H, hd))
+    w = jnp.asarray(
+        jax.nn.sigmoid(RNG.normal(size=(B, T, H, hd)) * 2) * 0.6 + 0.39,
+        jnp.float32)
+    u = randn((H, hd), scale=0.1)
+    y, s = wkv_pallas(r, k, v, w, u, interpret=True)
+    yr, sr = ref.wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(y, yr, atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(s, sr, atol=2e-3, rtol=1e-3)
+
+
+def test_wkv_kernel_extreme_decay():
+    """Near-zero decays must not overflow (log-space pairwise products)."""
+    B, T, H, hd = 1, 32, 1, 16
+    r, k, v = randn((B, T, H, hd)), randn((B, T, H, hd)), randn((B, T, H, hd))
+    w = jnp.full((B, T, H, hd), 1e-4, jnp.float32)
+    u = randn((H, hd))
+    y, s = wkv_pallas(r, k, v, w, u, interpret=True)
+    yr, sr = ref.wkv_ref(r, k, v, w, u)
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(y, yr, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("B,T,D", [(2, 300, 64), (1, 128, 512), (3, 37, 100),
+                                   (1, 1024, 256)])
+def test_rglru_kernel(B, T, D):
+    a = jnp.asarray(RNG.uniform(0.8, 0.999, (B, T, D)), jnp.float32)
+    b = randn((B, T, D))
+    h0 = randn((B, D))
+    y, hT = rglru_pallas(a, b, h0, interpret=True)
+    yr, hr = ref.rglru_ref(a, b, h0)
+    np.testing.assert_allclose(y, yr, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(hT, hr, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,d,C", [(64, 120, 10), (100, 512, 100),
+                                   (32, 48, 5), (130, 64, 16)])
+def test_persample_gradnorm_kernel(B, d, C):
+    h = randn((B, d))
+    logits = randn((B, C))
+    labels = jnp.asarray(RNG.integers(0, C, B), jnp.int32)
+    s, gisq = persample_gradnorm_pallas(h, logits, labels, interpret=True)
+    sr, gr = ref.persample_gradnorm_ref(h, logits, labels)
+    np.testing.assert_allclose(s, sr, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(gisq, gr, atol=1e-2, rtol=1e-3)
+
+
+def test_model_wkv_matches_kernel():
+    """models.rwkv6.wkv_chunked (XLA path) == Pallas kernel == oracle."""
+    from repro.models.rwkv6 import wkv_chunked
+    B, T, H, hd = 2, 40, 2, 32
+    r, k, v = randn((B, T, H, hd)), randn((B, T, H, hd), scale=0.3), \
+        randn((B, T, H, hd))
+    w = jnp.asarray(jax.nn.sigmoid(RNG.normal(size=(B, T, H, hd))) * 0.5
+                    + 0.45, jnp.float32)
+    u = randn((H, hd), scale=0.1)
+    state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    y1, s1 = wkv_chunked(r, k, v, w, u, state)
+    y2, s2 = wkv_pallas(r, k, v, w, u, interpret=True)
+    np.testing.assert_allclose(y1, y2, atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(s1, s2, atol=2e-3, rtol=1e-3)

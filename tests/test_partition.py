@@ -1,0 +1,87 @@
+"""Non-IID partitioners (paper Sec. VI-A data division)."""
+import numpy as np
+
+from repro.data import (apply_imbalance, dirichlet_partition,
+                        global_distribution, label_distributions,
+                        sort_and_partition)
+
+
+def make_labels(n_classes=10, per_class=100, seed=0):
+    rng = np.random.default_rng(seed)
+    labels = np.repeat(np.arange(n_classes), per_class)
+    rng.shuffle(labels)
+    return labels
+
+
+def test_sort_and_partition_coverage():
+    labels = make_labels()
+    rng = np.random.default_rng(0)
+    parts = sort_and_partition(labels, 20, 2, rng)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)
+
+
+def test_heterogeneity_decreases_with_shards():
+    labels = make_labels()
+    rng = np.random.default_rng(0)
+
+    def avg_l1(parts):
+        p = label_distributions(labels, parts, 10)
+        g = global_distribution(labels, parts, 10)
+        return np.abs(p - g).sum(axis=1).mean()
+
+    h1 = avg_l1(sort_and_partition(labels, 10, 1, rng))
+    h5 = avg_l1(sort_and_partition(labels, 10, 5, rng))
+    assert h1 > h5
+
+
+def test_single_shard_single_class():
+    """l=1 with V == C gives (nearly) single-class devices — the paper's
+    FSCD-Gc regime."""
+    labels = make_labels(10, 100)
+    rng = np.random.default_rng(0)
+    parts = sort_and_partition(labels, 10, 1, rng)
+    p = label_distributions(labels, parts, 10)
+    assert (p.max(axis=1) > 0.99).all()
+
+
+def test_dirichlet_sizes_equal():
+    labels = make_labels()
+    rng = np.random.default_rng(0)
+    parts = dirichlet_partition(labels, 16, 0.5, rng)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1
+    assert sum(sizes) <= len(labels)
+
+
+def test_dirichlet_alpha_controls_heterogeneity():
+    labels = make_labels(10, 500)
+    rng = np.random.default_rng(0)
+
+    def avg_l1(alpha):
+        parts = dirichlet_partition(labels, 16, alpha,
+                                    np.random.default_rng(1))
+        p = label_distributions(labels, parts, 10)
+        g = np.bincount(labels, minlength=10) / len(labels)
+        return np.abs(p - g).sum(axis=1).mean()
+
+    assert avg_l1(0.1) > avg_l1(10.0)
+
+
+def test_imbalance_ratio():
+    labels = make_labels(10, 100)
+    rng = np.random.default_rng(0)
+    idx = apply_imbalance(labels, 3.0, rng)
+    sub = labels[idx]
+    n1 = (sub < 5).sum()
+    n2 = (sub >= 5).sum()
+    assert abs(n2 / n1 - 3.0) < 0.3
+
+
+def test_label_distributions_rows_sum_to_one():
+    labels = make_labels()
+    rng = np.random.default_rng(0)
+    parts = dirichlet_partition(labels, 8, 1.0, rng)
+    p = label_distributions(labels, parts, 10)
+    assert np.allclose(p.sum(axis=1), 1.0)

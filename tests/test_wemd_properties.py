@@ -1,0 +1,98 @@
+"""Property-based tests (hypothesis) for the WEMD / P1-objective layer."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import wemd as WE
+
+dists = hnp.arrays(np.float64, st.integers(2, 8),
+                   elements=st.floats(0.01, 1.0)).map(
+    lambda a: a / a.sum())
+
+
+def dev_matrix(V, C):
+    # rows bounded away from zero so every device has a real distribution
+    return hnp.arrays(np.float64, (V, C), elements=st.floats(0.01, 1.0)).map(
+        lambda a: a / a.sum(axis=1, keepdims=True))
+
+
+@given(p=dists)
+@settings(max_examples=50, deadline=None)
+def test_wemd_zero_iff_equal(p):
+    w = np.ones(len(p))
+    assert WE.wemd(p, p, w) == 0.0
+    q = np.roll(p, 1)
+    if not np.allclose(p, q):
+        assert WE.wemd(p, q, w) > 0
+
+
+@given(st.data())
+@settings(max_examples=50, deadline=None)
+def test_incremental_add_matches_full(data):
+    V, C = data.draw(st.integers(2, 8)), data.draw(st.integers(2, 6))
+    p_dev = data.draw(dev_matrix(V, C))
+    gd = data.draw(hnp.arrays(np.float64, C, elements=st.floats(0.01, 1.0))
+                   .map(lambda a: a / a.sum()))
+    w = data.draw(hnp.arrays(np.float64, C, elements=st.floats(0.1, 2.0)))
+    mask = data.draw(hnp.arrays(np.bool_, V))
+    p_sum = p_dev[mask].sum(axis=0)
+    size = int(mask.sum())
+    cand = WE.wemd_add_candidates(p_sum, size, p_dev, gd, w)
+    for v in range(V):
+        if mask[v]:
+            continue
+        m2 = mask.copy()
+        m2[v] = True
+        assert np.isclose(cand[v], WE.wemd_of_set(p_dev, m2, gd, w)), v
+
+
+@given(st.data())
+@settings(max_examples=50, deadline=None)
+def test_swap_matches_full(data):
+    V, C = data.draw(st.integers(3, 8)), data.draw(st.integers(2, 5))
+    p_dev = data.draw(dev_matrix(V, C))
+    gd = np.ones(C) / C
+    w = np.ones(C)
+    k = data.draw(st.integers(1, V - 1))
+    mask = np.zeros(V, bool)
+    mask[:k] = True
+    p_sum = p_dev[mask].sum(axis=0)
+    in_idx = np.flatnonzero(mask)
+    out_idx = np.flatnonzero(~mask)
+    sw = WE.wemd_swap_candidates(p_sum, k, p_dev, in_idx, out_idx, gd, w)
+    for a, i in enumerate(in_idx):
+        for b, j in enumerate(out_idx):
+            m2 = mask.copy()
+            m2[i], m2[j] = False, True
+            assert np.isclose(sw[a, b], WE.wemd_of_set(p_dev, m2, gd, w))
+
+
+@given(st.integers(1, 100), st.integers(1, 256))
+@settings(max_examples=50, deadline=None)
+def test_sampling_variance_monotone(n, b):
+    s = 1.5
+    assert WE.sampling_variance(s, n, b) >= WE.sampling_variance(s, n + 1, b)
+    assert WE.sampling_variance(s, n, b) >= WE.sampling_variance(s, n, b + 1)
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_group_distribution_is_distribution(data):
+    V, C = data.draw(st.integers(1, 8)), data.draw(st.integers(2, 6))
+    p_dev = data.draw(dev_matrix(V, C))
+    mask = data.draw(hnp.arrays(np.bool_, V))
+    g = WE.group_distribution(p_dev, mask)
+    if mask.any():
+        assert np.isclose(g.sum(), 1.0)
+        assert (g >= -1e-12).all()
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_full_group_wemd_to_own_mean_zero(data):
+    """Scheduling everyone and defining global = union mean gives WEMD 0."""
+    V, C = data.draw(st.integers(1, 6)), data.draw(st.integers(2, 5))
+    p_dev = data.draw(dev_matrix(V, C))
+    mask = np.ones(V, bool)
+    gd = p_dev.mean(axis=0)
+    assert WE.wemd_of_set(p_dev, mask, gd, np.ones(C)) < 1e-9
