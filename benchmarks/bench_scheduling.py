@@ -1,6 +1,7 @@
 """Fig. 3: scheduling-solver quality — relative error + iteration counts
 of GS and FSCD against the CD baseline (and the exact optimum for small
-V)."""
+V) — plus a batch-size x V throughput sweep of the batched jax engine
+(``solve_many``) against the per-problem numpy loop (solves/sec)."""
 from __future__ import annotations
 
 import numpy as np
@@ -51,4 +52,29 @@ def run() -> list:
             rows.append(row(
                 f"fig3/iterations/{alg}/V{V}", np.mean(uss[alg]),
                 f"{np.mean(iters[alg]):.1f}"))
+    rows += run_batched()
+    return rows
+
+
+def run_batched() -> list:
+    """Batched-engine throughput: ``solve_many`` (jax) vs the numpy
+    loop, swept over batch size x V.  ``timed`` warms up once, so jit
+    compilation is excluded from the reported numbers."""
+    rows = []
+    numpy_fn = {"gs": S.greedy_scheduling, "fscd": S.fscd}
+    for V in (16, 64):
+        for B in (8, 32, 64):
+            rng = np.random.default_rng(100 + V + B)
+            probs = [make_problem(rng, V) for _ in range(B)]
+            for alg in ("gs", "fscd"):
+                _, us_np = timed(
+                    lambda: [numpy_fn[alg](p) for p in probs], repeats=3)
+                _, us_jx = timed(S.solve_many, probs, alg, repeats=3)
+                sps_np = B / (us_np * 1e-6)
+                sps_jx = B / (us_jx * 1e-6)
+                rows.append(row(f"batched/{alg}/numpy/V{V}/B{B}", us_np,
+                                f"{sps_np:.1f} solves/s"))
+                rows.append(row(
+                    f"batched/{alg}/jax/V{V}/B{B}", us_jx,
+                    f"{sps_jx:.1f} solves/s ({us_np / us_jx:.2f}x numpy)"))
     return rows

@@ -12,6 +12,7 @@ from repro.core.scheduling import (  # noqa: F401
     greedy_scheduling,
     power_of_choice,
     random_schedule,
+    solve_many,
 )
 from repro.core.wemd import p1_objective, wemd_of_set  # noqa: F401
 from repro.core.bandwidth import min_bandwidth, uplink_rate  # noqa: F401

@@ -13,11 +13,25 @@ Baselines of Section VI-A:
 All solvers consume a ``Problem`` describing one round: per-device label
 distributions, global distribution, class weights G_c, sigma, batch size,
 per-device minimum bandwidth B_v* and the bandwidth budget B.
+
+Batched engine
+--------------
+``solve_many(problems, algorithm, backend)`` solves many same-shaped
+Problems at once.  ``backend="numpy"`` loops the per-problem solvers
+above; ``backend="jax"`` (the default) stacks the problems into
+[B, V, C] / [B, V] arrays and runs GS / FSCD through the vectorized
+float64 engine in ``repro.core.scheduling_jax``, which reproduces the
+numpy solvers' masks exactly while amortizing the whole batch (and,
+for FSCD, the fix-sum axis S) over a single jitted loop.  The float32
+Pallas kernels ``repro.kernels.ops.wemd_swap`` / ``wemd_add`` provide
+the same swap/add matrices as device-resident primitives for TPU
+deployments.  ``FederatedTrainer`` selects the backend through the
+``FLConfig.scheduler_backend`` knob ("numpy" | "jax").
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -225,6 +239,40 @@ def exhaustive(prob: Problem) -> Schedule:
         if obj < best_obj:
             best_obj, best_mask = obj, mask
     return _make_schedule(prob, best_mask, 1 << V, "EXH")
+
+
+# ---------------------------------------------------------------------------
+# batched engine entry point
+
+
+SOLVE_MANY_ALGORITHMS = ("gs", "fscd", "cd")
+
+
+def solve_many(problems: Sequence[Problem], algorithm: str = "fscd",
+               backend: str = "jax", max_inner: int = 200) -> List[Schedule]:
+    """Solve a batch of same-shaped Problems.
+
+    ``backend="numpy"`` loops the reference per-problem solvers;
+    ``backend="jax"`` runs the batched float64 engine (identical masks,
+    one vectorized pass over the whole batch).  ``algorithm="cd"`` has
+    no batched implementation and always uses the numpy loop.
+    """
+    problems = list(problems)
+    if algorithm not in SOLVE_MANY_ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algorithm!r}, "
+                         f"expected one of {SOLVE_MANY_ALGORITHMS}")
+    if not problems:
+        return []
+    if backend == "numpy" or algorithm == "cd":
+        fn = {"gs": greedy_scheduling, "fscd": fscd,
+              "cd": coordinate_descent}[algorithm]
+        return [fn(p) for p in problems]
+    if backend != "jax":
+        raise ValueError(f"unknown backend {backend!r}")
+    from repro.core import scheduling_jax as SJ
+    if algorithm == "gs":
+        return SJ.solve_many_gs(problems)
+    return SJ.solve_many_fscd(problems, max_inner=max_inner)
 
 
 # ---------------------------------------------------------------------------

@@ -44,6 +44,7 @@ class FLConfig:
     eta: float = 0.1
     deadline_s: float = 2.0
     scheduler: str = "fedcgd-fscd"
+    scheduler_backend: str = "numpy"     # "numpy" | "jax" (batched engine)
     poc_candidates: int = 16
     bits_per_param: int = 32
     payload_bits_override: float = 0.0   # 0 = derive from model size
@@ -168,9 +169,16 @@ class FederatedTrainer:
                   round_idx) -> S.Schedule:
         cfg = self.cfg
         name = cfg.scheduler
+        backend = cfg.scheduler_backend
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown scheduler_backend: {backend!r}")
         if name == "fedcgd-gs":
+            if backend == "jax":
+                return S.solve_many([prob], "gs", backend="jax")[0]
             return S.greedy_scheduling(prob)
         if name in ("fedcgd-fscd", "fedcgd-fscd-gc"):
+            if backend == "jax":
+                return S.solve_many([prob], "fscd", backend="jax")[0]
             return S.fscd(prob)
         if name == "fedcgd-cd":
             return S.coordinate_descent(prob, self.rng)

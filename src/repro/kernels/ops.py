@@ -14,6 +14,7 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.persample_gradnorm import persample_gradnorm_pallas
 from repro.kernels.rglru_scan import rglru_pallas
 from repro.kernels.rwkv_scan import wkv_pallas
+from repro.kernels.wemd_swap import wemd_add_pallas, wemd_swap_pallas
 
 
 def _interpret() -> bool:
@@ -40,6 +41,20 @@ def persample_gradnorm_sigma(features, logits, labels):
     return sigma
 
 
+def wemd_swap(p_sum, p_dev, global_dist, class_weights, sizes):
+    """Dense [B,V,V] swap-candidate WEMD matrix (FSCD inner loop)."""
+    return wemd_swap_pallas(p_sum, p_dev, global_dist, class_weights,
+                            sizes, interpret=_interpret())
+
+
+def wemd_add(p_sum, p_dev, global_dist, class_weights, sizes):
+    """[B,V] add-candidate WEMD row (GS inner loop)."""
+    return wemd_add_pallas(p_sum, p_dev, global_dist, class_weights,
+                           sizes, interpret=_interpret())
+
+
 __all__ = ["attention", "wkv", "rglru", "persample_gradnorm_sigma",
+           "wemd_swap", "wemd_add",
            "flash_attention", "wkv_pallas", "rglru_pallas",
-           "persample_gradnorm_pallas", "ref"]
+           "persample_gradnorm_pallas", "wemd_swap_pallas",
+           "wemd_add_pallas", "ref"]

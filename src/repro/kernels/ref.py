@@ -64,6 +64,25 @@ def rglru_ref(a, b, h0):
     return hs.transpose(1, 0, 2), final
 
 
+def wemd_swap_ref(p_sum, p_dev, global_dist, class_weights, sizes):
+    """Batched dense swap-candidate WEMD matrix (paper Eq. 8 applied to
+    Pi \\ {i} u {j} for every pair).  p_sum [B,C], p_dev [B,V,C],
+    global_dist/class_weights [B,C], sizes [B] -> [B,V,V]."""
+    base = (p_sum[:, None, None, :] - p_dev[:, :, None, :]) \
+        + p_dev[:, None, :, :]
+    dist = base / sizes[:, None, None, None]
+    return jnp.sum(jnp.abs(dist - global_dist[:, None, None, :])
+                   * class_weights[:, None, None, :], axis=-1)
+
+
+def wemd_add_ref(p_sum, p_dev, global_dist, class_weights, sizes):
+    """Batched add-candidate WEMD row (Pi u {v} for every v).
+    Same layouts as ``wemd_swap_ref``; returns [B, V]."""
+    new = (p_sum[:, None, :] + p_dev) / (sizes[:, None, None] + 1.0)
+    return jnp.sum(jnp.abs(new - global_dist[:, None, :])
+                   * class_weights[:, None, :], axis=-1)
+
+
 def persample_gradnorm_ref(features, logits, labels):
     """sigma-hat (Eq. 10) for a softmax-CE linear head, materializing the
     full per-sample gradient tensor [B, d, C] (the thing the kernel

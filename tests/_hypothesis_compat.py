@@ -1,0 +1,49 @@
+"""Optional-``hypothesis`` shim so the suite collects without the package.
+
+Property-based tests import ``given``/``settings``/``st``/``hnp`` from
+here instead of from ``hypothesis`` directly.  When hypothesis is
+installed (the dev extra), the real objects are re-exported and the
+property tests run as usual.  When it is missing, ``given`` swaps the
+test body for a skip and the strategy namespaces collapse to inert
+placeholders, so module import — and therefore tier-1 collection —
+still succeeds.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    import hypothesis.extra.numpy as hnp
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any attribute access / call / .map chain at module
+        scope; never actually generates data."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+    hnp = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def decorate(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = getattr(fn, "__name__", "test_property")
+            skipped.__doc__ = getattr(fn, "__doc__", None)
+            return skipped
+        return decorate
+
+    def settings(*args, **kwargs):
+        def decorate(fn):
+            return fn
+        return decorate
+
+__all__ = ["given", "settings", "st", "hnp", "HAVE_HYPOTHESIS"]

@@ -6,3 +6,5 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, for the benchmarks.* helpers (mini_fl_world etc.)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

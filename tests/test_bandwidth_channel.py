@@ -1,6 +1,7 @@
 """Wireless substrate: Eq. 9 bandwidth + TR 38.901 channel."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bandwidth import (min_bandwidth, min_bandwidth_bisect,
                                   uplink_rate)

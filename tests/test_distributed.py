@@ -6,6 +6,10 @@ import sys
 
 import pytest
 
+# 8 forced host devices rendezvous through one real core: minutes of
+# wall-clock per subprocess on CI-sized boxes -> opt-in profile only
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -43,6 +43,7 @@ def test_every_scheduler_runs_a_round(small_world, scheduler):
     assert rec["num_scheduled"] <= rec["num_available"]
 
 
+@pytest.mark.slow
 def test_fl_learns(small_world):
     model, train, test = small_world
     rng = np.random.default_rng(3)

@@ -10,6 +10,7 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.persample_gradnorm import persample_gradnorm_pallas
 from repro.kernels.rglru_scan import rglru_pallas
 from repro.kernels.rwkv_scan import wkv_pallas
+from repro.kernels.wemd_swap import wemd_add_pallas, wemd_swap_pallas
 
 RNG = np.random.default_rng(0)
 
@@ -93,6 +94,48 @@ def test_persample_gradnorm_kernel(B, d, C):
     sr, gr = ref.persample_gradnorm_ref(h, logits, labels)
     np.testing.assert_allclose(s, sr, atol=1e-3, rtol=1e-3)
     np.testing.assert_allclose(gisq, gr, atol=1e-2, rtol=1e-3)
+
+
+def _wemd_inputs(B, V, C, size):
+    p_dev = jnp.asarray(RNG.dirichlet(np.full(C, 0.4), size=(B, V)),
+                        jnp.float32)
+    p_sum = p_dev[:, :size].sum(axis=1)
+    gd = p_dev.mean(axis=1)
+    cw = jnp.asarray(RNG.uniform(0.5, 1.5, (B, C)), jnp.float32)
+    sizes = jnp.full((B,), float(size), jnp.float32)
+    return p_sum, p_dev, gd, cw, sizes
+
+
+@pytest.mark.parametrize("B,V,C", [(2, 16, 10), (1, 64, 10), (3, 7, 5),
+                                   (2, 33, 100), (1, 130, 130)])
+def test_wemd_swap_kernel(B, V, C):
+    """Tiled [in,out] swap-matrix kernel vs the jnp oracle (class axis
+    tiled, V padded to the i-block) — acceptance bar: 1e-5."""
+    args = _wemd_inputs(B, V, C, size=min(5, V))
+    out = wemd_swap_pallas(*args, interpret=True)
+    expect = ref.wemd_swap_ref(*args)
+    assert out.shape == (B, V, V)
+    np.testing.assert_allclose(out, expect, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,V,C", [(2, 16, 10), (1, 64, 10), (3, 7, 5),
+                                   (2, 33, 100)])
+def test_wemd_add_kernel(B, V, C):
+    args = _wemd_inputs(B, V, C, size=min(3, V))
+    out = wemd_add_pallas(*args, interpret=True)
+    expect = ref.wemd_add_ref(*args)
+    assert out.shape == (B, V)
+    np.testing.assert_allclose(out, expect, atol=1e-5, rtol=1e-5)
+
+
+def test_wemd_kernel_block_sweep():
+    """Non-divisible block shapes hit the padding paths."""
+    args = _wemd_inputs(2, 19, 11, size=4)
+    expect = ref.wemd_swap_ref(*args)
+    for bi, bc in [(4, 4), (8, 11), (16, 128)]:
+        out = wemd_swap_pallas(*args, block_i=bi, block_c=bc,
+                               interpret=True)
+        np.testing.assert_allclose(out, expect, atol=1e-5, rtol=1e-5)
 
 
 def test_model_wkv_matches_kernel():

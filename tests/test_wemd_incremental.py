@@ -1,0 +1,95 @@
+"""Incremental WEMD algebra: the O(V*C) / O(V^2*C) candidate updates
+must agree with recomputing ``wemd_of_set`` from scratch, and the
+batched jnp oracles in ``kernels/ref.py`` must agree with the numpy
+layer (the same invariant the Pallas kernels are parity-tested
+against)."""
+import numpy as np
+import pytest
+
+from repro.core import wemd as WE
+
+jnp = pytest.importorskip("jax.numpy")
+from repro.kernels import ref  # noqa: E402
+
+
+def make_world(rng, V, C):
+    p_dev = rng.dirichlet(np.full(C, 0.4), size=V)
+    gd = rng.dirichlet(np.full(C, 3.0))
+    cw = rng.uniform(0.5, 1.5, C)
+    return p_dev, gd, cw
+
+
+@pytest.mark.parametrize("V,C", [(6, 4), (12, 10), (20, 3)])
+def test_add_candidates_match_scratch(V, C):
+    rng = np.random.default_rng(V * C)
+    p_dev, gd, cw = make_world(rng, V, C)
+    for trial in range(5):
+        mask = rng.random(V) < 0.4
+        p_sum = p_dev[mask].sum(axis=0)
+        size = int(mask.sum())
+        cand = WE.wemd_add_candidates(p_sum, size, p_dev, gd, cw)
+        for v in range(V):
+            if mask[v]:
+                continue
+            m2 = mask.copy()
+            m2[v] = True
+            assert np.isclose(cand[v], WE.wemd_of_set(p_dev, m2, gd, cw),
+                              atol=1e-12), (trial, v)
+
+
+@pytest.mark.parametrize("V,C", [(6, 4), (12, 10), (20, 3)])
+def test_swap_candidates_match_scratch(V, C):
+    rng = np.random.default_rng(V + C)
+    p_dev, gd, cw = make_world(rng, V, C)
+    for trial in range(5):
+        k = int(rng.integers(1, V))
+        mask = np.zeros(V, bool)
+        mask[rng.choice(V, k, replace=False)] = True
+        p_sum = p_dev[mask].sum(axis=0)
+        in_idx = np.flatnonzero(mask)
+        out_idx = np.flatnonzero(~mask)
+        sw = WE.wemd_swap_candidates(p_sum, k, p_dev, in_idx, out_idx,
+                                     gd, cw)
+        for a, i in enumerate(in_idx):
+            for b, j in enumerate(out_idx):
+                m2 = mask.copy()
+                m2[i], m2[j] = False, True
+                assert np.isclose(sw[a, b],
+                                  WE.wemd_of_set(p_dev, m2, gd, cw),
+                                  atol=1e-12), (trial, i, j)
+
+
+# ---------------------------------------------------------------------------
+# batched jnp oracles (ref.py) vs the numpy layer
+
+
+@pytest.mark.parametrize("B,V,C", [(1, 8, 5), (3, 16, 10), (2, 33, 7)])
+def test_wemd_swap_ref_matches_numpy(B, V, C):
+    rng = np.random.default_rng(B * V)
+    sizes = np.full(B, 4.0)
+    p_dev = rng.dirichlet(np.full(C, 0.4), size=(B, V))
+    p_sum = p_dev[:, :4].sum(axis=1)
+    gd = p_dev.mean(axis=1)
+    cw = rng.uniform(0.5, 1.5, (B, C))
+    out = np.asarray(ref.wemd_swap_ref(
+        *(jnp.asarray(x) for x in (p_sum, p_dev, gd, cw, sizes))))
+    for b in range(B):
+        expect = WE.wemd_swap_candidates(p_sum[b], 4, p_dev[b],
+                                         np.arange(V), np.arange(V),
+                                         gd[b], cw[b])
+        np.testing.assert_allclose(out[b], expect, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,V,C", [(1, 8, 5), (3, 16, 10), (2, 33, 7)])
+def test_wemd_add_ref_matches_numpy(B, V, C):
+    rng = np.random.default_rng(B + V)
+    sizes = np.full(B, 3.0)
+    p_dev = rng.dirichlet(np.full(C, 0.4), size=(B, V))
+    p_sum = p_dev[:, :3].sum(axis=1)
+    gd = p_dev.mean(axis=1)
+    cw = rng.uniform(0.5, 1.5, (B, C))
+    out = np.asarray(ref.wemd_add_ref(
+        *(jnp.asarray(x) for x in (p_sum, p_dev, gd, cw, sizes))))
+    for b in range(B):
+        expect = WE.wemd_add_candidates(p_sum[b], 3, p_dev[b], gd[b], cw[b])
+        np.testing.assert_allclose(out[b], expect, atol=1e-5, rtol=1e-5)

@@ -1,7 +1,7 @@
 """Property-based tests (hypothesis) for the WEMD / P1-objective layer."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
+
+from _hypothesis_compat import given, hnp, settings, st
 
 from repro.core import wemd as WE
 
