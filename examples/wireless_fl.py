@@ -8,6 +8,14 @@ This is the paper's experiment at container scale: CIFAR-10 is replaced
 by a synthetic class-structured image set (DESIGN.md §3) — everything
 else (channel, Eq. 9 bandwidth, Algorithm 1/2/3, estimators) is the
 paper's pipeline.
+
+``--lossy`` turns on the wireless fault model (upload-time shadow
+re-draws, outages, dropouts, corrupted deltas) plus the server defenses
+(sanitization, norm clipping, one-shot backfill) and prints the failure
+telemetry; individual knobs can be overridden, e.g.:
+
+  PYTHONPATH=src python examples/wireless_fl.py --lossy \
+      --outage-prob 0.5 --rounds 10 --devices 16
 """
 import argparse
 
@@ -18,6 +26,7 @@ from repro.data import (apply_imbalance, dirichlet_partition,
                         sort_and_partition, synthetic_image_dataset,
                         train_test_split)
 from repro.fl import FederatedTrainer, FLConfig
+from repro.faults import FaultConfig
 from repro.models import build_model
 
 
@@ -37,6 +46,13 @@ def main():
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--available-prob", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lossy", action="store_true",
+                    help="enable the wireless fault model + defenses")
+    ap.add_argument("--outage-prob", type=float, default=None)
+    ap.add_argument("--dropout-prob", type=float, default=None)
+    ap.add_argument("--corrupt-prob", type=float, default=None)
+    ap.add_argument("--reshadow-std-db", type=float, default=None)
+    ap.add_argument("--clip-delta-norm", type=float, default=None)
     args = ap.parse_args()
 
     ds = synthetic_image_dataset(num_classes=args.classes, num_per_class=120,
@@ -59,10 +75,24 @@ def main():
     import dataclasses as dc
     cfg = dc.replace(PAPER_CNN_CIFAR10.reduced(), num_classes=args.classes)
     model = build_model(cfg)
+    faults = FaultConfig()
+    if args.lossy:
+        faults = FaultConfig(outage_prob=0.2, dropout_prob=0.1,
+                             deadline_miss_prob=0.05, corrupt_prob=0.1,
+                             reshadow_std_db=4.0, outage_slack=0.2,
+                             clip_delta_norm=25.0, backfill=True)
+    overrides = {k: getattr(args, k) for k in
+                 ("outage_prob", "dropout_prob", "corrupt_prob",
+                  "reshadow_std_db", "clip_delta_norm")
+                 if getattr(args, k) is not None}
+    if overrides:
+        import dataclasses
+        faults = dataclasses.replace(faults, **overrides)
+
     fl = FLConfig(num_devices=args.devices,
                   available_prob=args.available_prob, batch_size=16,
                   tau=args.tau, scheduler=args.scheduler, eval_every=5,
-                  seed=args.seed)
+                  seed=args.seed, faults=faults)
     trainer = FederatedTrainer(model, train, test, parts, fl)
     hist = trainer.run(args.rounds, verbose=True)
 
@@ -76,6 +106,23 @@ def main():
     print(f"final sigma-hat   : {trainer.sigma_hat:.3f}  "
           f"G-hat: {trainer.g_hat:.3f}  "
           f"(G/sigma = {trainer.g_hat / max(trainer.sigma_hat, 1e-9):.3f})")
+
+    if faults.injection_enabled:
+        causes = {}
+        for h in hist:
+            for c, n in h["failure_causes"].items():
+                causes[c] = causes.get(c, 0) + n
+        uploaded = sum(h["num_uploaded"] for h in hist)
+        print("\n-- failure telemetry --")
+        print(f"uploads landed    : {uploaded} "
+              f"({sum(h['num_failed'] for h in hist)} failed)")
+        print(f"causes            : " + ", ".join(
+            f"{c}={n}" for c, n in sorted(causes.items())))
+        print(f"backfilled        : {sum(h['num_backfilled'] for h in hist)}")
+        print(f"sanitized deltas  : {sum(h['num_sanitized'] for h in hist)} "
+              f"(clipped {sum(h['num_clipped'] for h in hist)})")
+        print(f"zero-upload rounds: "
+              f"{sum(1 for h in hist if h['num_uploaded'] == 0)}")
 
 
 if __name__ == "__main__":

@@ -56,6 +56,25 @@ def min_bandwidth_bisect(data_bits: float, deadline_s: float, sh: float,
     return 0.5 * (lo + hi)
 
 
+def deadline_met(bandwidth_hz, data_bits: float, deadline_s: float,
+                 tx_power_gain, noise_psd: float,
+                 slack: float = 0.0) -> np.ndarray:
+    """Eq. 9 feasibility at a *fixed* allocation (vectorized).
+
+    True where a device granted ``bandwidth_hz`` can push ``data_bits``
+    within ``(1 + slack) * deadline_s`` at the given received power —
+    the upload-time check of the fault layer, where the gain may have
+    shadow-faded since B* was allocated.  Non-positive bandwidth (the
+    infeasible marker) is never met.  A relative 1e-9 tolerance keeps
+    Eq. 9's equality allocation (rate(B*) * d_cm == D_w up to Lambert-W
+    rounding) on the feasible side."""
+    b = np.asarray(bandwidth_hz, dtype=np.float64)
+    ok = b > 0
+    rate = uplink_rate(np.where(ok, b, 1.0), tx_power_gain, noise_psd)
+    return ok & (rate * deadline_s * (1.0 + slack)
+                 >= data_bits * (1.0 - 1e-9))
+
+
 def uplink_rate(bandwidth_hz, tx_power_gain, noise_psd):
     """Shannon FDMA rate r = B log2(1 + S*H/(B*N0)) (vectorized)."""
     b = np.asarray(bandwidth_hz, dtype=np.float64)

@@ -1,0 +1,127 @@
+"""Per-round wireless fault injection.
+
+``FaultInjector.draw(j)`` realises one round's faults for every device
+from a generator seeded by ``(trainer seed, fault seed, round index)``:
+the draws do not consume the trainer's RNG stream and do not depend on
+which devices end up available or scheduled, so histories are bitwise
+reproducible and faults can be evaluated lazily per device.
+
+Failure-cause precedence for a scheduled upload:
+    dropout > deadline (compute straggler) > outage (channel) > corrupt
+The first three are *arrival* failures (the upload never lands and its
+bandwidth is reclaimable by the backfill pass); "corrupt" uploads do
+arrive — the server-side sanitizer decides their fate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.bandwidth import deadline_met
+from repro.faults.config import FaultConfig
+from repro.wireless.channel import apply_shadow_db
+
+# Arrival-failure causes + corruption, in precedence order.
+FAILURE_CAUSES = ("dropout", "deadline", "outage", "corrupt")
+
+
+@dataclasses.dataclass
+class RoundFaults:
+    """One round's fault realisation over all V devices."""
+    dropout: np.ndarray        # [V] bool
+    deadline_miss: np.ndarray  # [V] bool
+    outage: np.ndarray         # [V] bool — blanket Bernoulli outage
+    reshadow_db: np.ndarray    # [V] float — second shadow draw (dB)
+    corrupt: np.ndarray        # [V] bool
+    corrupt_mode: np.ndarray   # [V] int — index into cfg.corrupt_modes
+
+    @classmethod
+    def none(cls, num_devices: int) -> "RoundFaults":
+        z = np.zeros(num_devices, dtype=bool)
+        return cls(dropout=z, deadline_miss=z.copy(), outage=z.copy(),
+                   reshadow_db=np.zeros(num_devices),
+                   corrupt=z.copy(),
+                   corrupt_mode=np.zeros(num_devices, dtype=np.int64))
+
+
+class FaultInjector:
+    def __init__(self, cfg: FaultConfig, num_devices: int, base_seed: int):
+        self.cfg = cfg
+        self.num_devices = num_devices
+        self.base_seed = base_seed
+
+    @property
+    def enabled(self) -> bool:
+        return self.cfg.injection_enabled
+
+    # ------------------------------------------------------------------
+    def draw(self, round_idx: int) -> RoundFaults:
+        """Realise round ``round_idx``'s faults (all-clear when inert)."""
+        if not self.enabled:
+            return RoundFaults.none(self.num_devices)
+        cfg = self.cfg
+        V = self.num_devices
+        rng = np.random.default_rng(
+            [0xFA017, self.base_seed, cfg.seed, round_idx])
+        return RoundFaults(
+            dropout=rng.random(V) < cfg.dropout_prob,
+            deadline_miss=rng.random(V) < cfg.deadline_miss_prob,
+            outage=rng.random(V) < cfg.outage_prob,
+            reshadow_db=(rng.normal(0.0, cfg.reshadow_std_db, V)
+                         if cfg.reshadow_std_db > 0 else np.zeros(V)),
+            corrupt=rng.random(V) < cfg.corrupt_prob,
+            corrupt_mode=rng.integers(0, len(cfg.corrupt_modes), V),
+        )
+
+    # ------------------------------------------------------------------
+    def upload_gains(self, gains: np.ndarray, rf: RoundFaults) -> np.ndarray:
+        """Channel gains as seen at upload time (second shadow draw)."""
+        if self.cfg.reshadow_std_db <= 0:
+            return gains
+        return apply_shadow_db(gains, rf.reshadow_db)
+
+    def arrival_failures(self, rf: RoundFaults, scheduled: np.ndarray,
+                         alloc_bw: np.ndarray, data_bits: float,
+                         deadline_s: float, upload_rx_power: np.ndarray,
+                         noise_psd: float) -> np.ndarray:
+        """Per-device arrival-failure cause ("" = the upload lands).
+
+        ``scheduled``/``alloc_bw``/``upload_rx_power`` are [V] global
+        arrays; alloc_bw is the bandwidth granted at scheduling time
+        (Eq. 9's B* under the scheduling-time gains).
+        """
+        cause = np.full(self.num_devices, "", dtype=object)
+        sched = np.asarray(scheduled, dtype=bool)
+        if not self.enabled or not sched.any():
+            return cause
+        cause[sched & rf.dropout] = "dropout"
+        free = sched & (cause == "")
+        cause[free & rf.deadline_miss] = "deadline"
+        free = sched & (cause == "")
+        out = free & rf.outage
+        if self.cfg.reshadow_std_db > 0:
+            met = deadline_met(alloc_bw, data_bits, deadline_s,
+                               upload_rx_power, noise_psd,
+                               slack=self.cfg.outage_slack)
+            out |= free & ~met
+        cause[out] = "outage"
+        return cause
+
+    # ------------------------------------------------------------------
+    def corrupt_delta(self, delta, mode: str):
+        """Damage one device's model delta (pytree) in the given mode."""
+        import jax
+        import jax.numpy as jnp
+        if mode == "nan":
+            return jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), delta)
+        if mode == "inf":
+            return jax.tree.map(lambda x: jnp.full_like(x, jnp.inf), delta)
+        if mode == "explode":
+            s = self.cfg.corrupt_scale
+            return jax.tree.map(lambda x: x * jnp.asarray(s, x.dtype), delta)
+        raise ValueError(f"unknown corrupt mode {mode!r}")
+
+    def corrupt_mode_of(self, rf: RoundFaults, v: int) -> str:
+        return self.cfg.corrupt_modes[
+            int(rf.corrupt_mode[v]) % len(self.cfg.corrupt_modes)]

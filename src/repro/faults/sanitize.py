@@ -1,0 +1,99 @@
+"""Server-side delta sanitization (the defense half of the fault layer).
+
+Before Eq. 2 aggregation every arrived upload is screened:
+  * NaN/Inf guard (always on): a delta with any non-finite leaf is
+    dropped — averaging it would poison the global model irreversibly.
+  * Norm clip (``FaultConfig.clip_delta_norm`` > 0): a delta whose L2
+    norm exceeds the clip is rescaled onto the clip ball and kept.
+
+The sanitizer never mutates the stacked device parameters; it reports
+which uploads survive and returns replacement deltas only for the ones
+it modified, so a clean round leaves the aggregation inputs bitwise
+untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.estimation import tree_norm
+
+
+@dataclasses.dataclass
+class SanitizeResult:
+    kept: List[int]                 # upload indices entering aggregation
+    dropped_nonfinite: List[int]    # uploads rejected by the NaN/Inf guard
+    clipped: List[int]              # uploads rescaled onto the clip ball
+    deltas: Dict[int, object]       # index -> replacement delta pytree
+
+    @property
+    def num_sanitized(self) -> int:
+        return len(self.dropped_nonfinite) + len(self.clipped)
+
+
+def finite_per_device(stacked) -> np.ndarray:
+    """[A] bool: device i's leaves are all finite (one vectorized pass)."""
+    import jax
+    import jax.numpy as jnp
+    leaves = jax.tree.leaves(stacked)
+    flags = [jnp.isfinite(x).reshape(x.shape[0], -1).all(axis=1)
+             for x in leaves]
+    out = flags[0]
+    for f in flags[1:]:
+        out = out & f
+    return np.asarray(out)
+
+
+def tree_is_finite(tree) -> bool:
+    import jax
+    import jax.numpy as jnp
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(tree))
+
+
+def sanitize_updates(deltas, upload_idx: Sequence[int],
+                     overrides: Dict[int, object], clip_norm: float,
+                     norms: Optional[np.ndarray] = None) -> SanitizeResult:
+    """Screen the uploads in ``upload_idx``.
+
+    ``deltas`` is the stacked [A, ...] delta pytree; ``overrides`` maps
+    an index to a replacement (e.g. corrupted) delta that shadows the
+    stacked row; ``norms`` optionally carries precomputed L2 norms for
+    the unmodified rows.
+    """
+    import jax
+    upload_idx = [int(i) for i in upload_idx]
+    res = SanitizeResult(kept=[], dropped_nonfinite=[], clipped=[],
+                         deltas=dict(overrides))
+    if not upload_idx:
+        return res
+    plain = [i for i in upload_idx if i not in overrides]
+    finite = {}
+    if plain:
+        fin = finite_per_device(deltas)
+        finite.update({i: bool(fin[i]) for i in plain})
+    for i in upload_idx:
+        delta = res.deltas.get(i)
+        ok = tree_is_finite(delta) if delta is not None else finite[i]
+        if not ok:
+            res.dropped_nonfinite.append(i)
+            res.deltas.pop(i, None)
+            continue
+        if clip_norm > 0:
+            if delta is not None:
+                norm = float(tree_norm(delta))
+            elif norms is not None:
+                norm = float(norms[i])
+            else:
+                norm = float(tree_norm(
+                    jax.tree.map(lambda x: x[i], deltas)))
+            if norm > clip_norm:
+                if delta is None:
+                    delta = jax.tree.map(lambda x: x[i], deltas)
+                scale = clip_norm / norm
+                res.deltas[i] = jax.tree.map(
+                    lambda x: x * np.asarray(scale, x.dtype), delta)
+                res.clipped.append(i)
+        res.kept.append(i)
+    return res

@@ -1,3 +1,4 @@
 from repro.fl.rounds import FederatedTrainer, FLConfig  # noqa: F401
 from repro.fl.client import make_local_update, payload_bits  # noqa: F401
 from repro.fl.server import aggregate  # noqa: F401
+from repro.faults import FaultConfig, FaultInjector  # noqa: F401

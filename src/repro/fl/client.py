@@ -47,6 +47,13 @@ def make_local_update(loss_fn: Callable, eta: float, tau: int):
     return update
 
 
+def set_device(stacked, v: int, tree):
+    """Write one device's pytree into the stacked [V, ...] upload buffer
+    (inverse of ``server.select_device``) — used by the fault layer to
+    substitute corrupted or clipped uploads."""
+    return jax.tree.map(lambda s, x: s.at[v].set(x), stacked, tree)
+
+
 def model_delta(new_params, old_params):
     """g_v = w_v^{(j+1)} - w_v^{(j)} (uploaded payload)."""
     return jax.tree.map(lambda a, b: a - b, new_params, old_params)

@@ -7,8 +7,22 @@ Per round j:
      steps (Eq. 1) — vmapped into one XLA program
   3. devices report sigma_v (Eq. 10) and p_v over the sampled data
   4. server solves P1 (GS / FSCD / FSCD-Gc or a baseline policy)
-  5. scheduled devices upload; weighted aggregation (Eq. 2)
-  6. server refreshes G (Eq. 12) from the uploaded deltas
+  5. scheduled devices upload — each upload can fail (dropout, compute
+     straggling, a second shadow-fading draw breaking Eq. 9) or arrive
+     corrupted; the server sanitizes deltas (NaN/Inf guard + norm
+     clip), backfills failed slots by re-solving P1 over the surviving
+     feasible devices with the residual bandwidth, and aggregates the
+     uploads that actually landed (Eq. 2, weights renormalized)
+  6. server refreshes G (Eq. 12) from the landed deltas; on a
+     zero-upload round it skips aggregation and decays sigma-hat /
+     G-hat toward their priors instead of freezing stale estimates
+
+The fault model lives in ``repro.faults`` and is configured through
+``FLConfig.faults``; with every probability at zero (the default) the
+loop reproduces the fault-free trainer bitwise.  Every round record
+carries failure telemetry (``num_failed``, ``failure_causes``,
+``num_backfilled``, ``num_sanitized``, ...), so the fault layer doubles
+as an observability layer.
 
 The trainer is model-agnostic (CNNs for the paper's experiments; any
 model-zoo architecture through the same interface).
@@ -29,7 +43,10 @@ from repro.core import estimation as E
 from repro.core.bandwidth import min_bandwidth
 from repro.core.wemd import wemd_of_set
 from repro.data.datasets import ArrayDataset
-from repro.fl.client import make_local_update, payload_bits
+from repro.faults.config import FaultConfig
+from repro.faults.injector import FAILURE_CAUSES, FaultInjector
+from repro.faults.sanitize import sanitize_updates
+from repro.fl.client import make_local_update, payload_bits, set_device
 from repro.fl.server import aggregate
 from repro.models.registry import Model
 from repro.wireless.channel import CellState, make_cell
@@ -53,6 +70,7 @@ class FLConfig:
     g_init: float = 1.0
     eval_every: int = 5
     ucb_beta: float = 0.05
+    faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
 
 
 SCHEDULERS = ("fedcgd-fscd", "fedcgd-gs", "fedcgd-fscd-gc", "fedcgd-cd",
@@ -91,6 +109,8 @@ class FederatedTrainer:
         self.plays = np.zeros(cfg.num_devices)       # Fed-CBS counters
         self.cum_loss = np.zeros(cfg.num_devices)    # POC statistics
         self.history: List[Dict] = []
+        self.faults = FaultInjector(cfg.faults, cfg.num_devices, cfg.seed)
+        self.g_refresh_errors = 0                    # cumulative Eq. 12 skips
 
         self._local_update = make_local_update(self._loss, cfg.eta, cfg.tau)
         self._eval_batch = jax.jit(self._eval_fn)
@@ -197,6 +217,55 @@ class FederatedTrainer:
         raise ValueError(name)
 
     # ------------------------------------------------------------------
+    def _corrupt_overrides(self, rf, arrived, avail_idx, deltas) -> Dict:
+        """Replacement deltas for uploads damaged in transit."""
+        out = {}
+        if not (self.faults.enabled and self.cfg.faults.corrupt_prob > 0):
+            return out
+        for i in np.flatnonzero(arrived):
+            v = avail_idx[i]
+            if rf.corrupt[v]:
+                out[int(i)] = self.faults.corrupt_delta(
+                    jax.tree.map(lambda x, i=i: x[i], deltas),
+                    self.faults.corrupt_mode_of(rf, v))
+        return out
+
+    def _backfill(self, prob, sched, arrived, rf, avail_idx, bstar,
+                  upload_gains, deltas, delta_norms, j):
+        """One-shot reschedule after upload failures: re-solve P1 over
+        the surviving feasible devices (available, unscheduled, not
+        dropped out) under the residual bandwidth, at upload-time gains.
+
+        Backfilled uploads are treated as freshly channel-measured (no
+        second outage draw) but still face corruption + sanitization.
+        Returns (kept_indices, (num_scheduled, dropped_nf, clipped,
+        replacement_deltas))."""
+        cfg = self.cfg
+        residual = self.cell.params.total_bandwidth_hz \
+            - float(bstar[avail_idx[arrived]].sum())
+        if residual <= 0:
+            return [], (0, 0, 0, {})
+        bf_bw = min_bandwidth(
+            self.payload, cfg.deadline_s,
+            self.cell.received_power(upload_gains),
+            self.cell.params.noise_psd_w)[avail_idx]
+        blocked = sched.mask | rf.dropout[avail_idx]
+        bf_bw = np.where(blocked, -1.0, bf_bw)
+        if not ((bf_bw > 0) & (bf_bw <= residual)).any():
+            return [], (0, 0, 0, {})
+        prob_bf = dataclasses.replace(prob, min_bw=bf_bw, total_bw=residual)
+        bf = self._schedule(prob_bf, avail_idx, upload_gains, delta_norms, j)
+        if not bf.mask.any():
+            return [], (0, 0, 0, {})
+        self.plays[avail_idx[bf.mask]] += 1
+        overrides = self._corrupt_overrides(rf, bf.mask, avail_idx, deltas)
+        san = sanitize_updates(deltas, np.flatnonzero(bf.mask), overrides,
+                               cfg.faults.clip_delta_norm, norms=delta_norms)
+        return san.kept, (int(bf.num_scheduled),
+                          len(san.dropped_nonfinite), len(san.clipped),
+                          san.deltas)
+
+    # ------------------------------------------------------------------
     def run_round(self, j: int) -> Dict:
         cfg = self.cfg
         avail = self.rng.random(cfg.num_devices) < cfg.available_prob
@@ -238,26 +307,88 @@ class FederatedTrainer:
         mask_global[avail_idx[sched.mask]] = True
         self.plays[mask_global] += 1
 
-        if sched.mask.any():
-            self.params = aggregate(dev_params, sched.mask)
-            # Eq. 12: refresh G from uploaded deltas
-            up = np.flatnonzero(sched.mask)
+        # ---- upload phase: fault injection + server defenses ----------
+        fcfg = cfg.faults
+        inj = self.faults
+        rf = inj.draw(j)
+        upload_gains = inj.upload_gains(gains, rf)
+        cause = inj.arrival_failures(
+            rf, mask_global, bstar, self.payload, cfg.deadline_s,
+            self.cell.received_power(upload_gains),
+            self.cell.params.noise_psd_w)
+        cause_counts = {c: 0 for c in FAILURE_CAUSES}
+        arrived = sched.mask.copy()             # local (avail) index space
+        for i in np.flatnonzero(sched.mask):
+            c = cause[avail_idx[i]]
+            if c:
+                arrived[i] = False
+                cause_counts[c] += 1
+
+        # sanitize arrived uploads (NaN/Inf guard + norm clip)
+        overrides = self._corrupt_overrides(rf, arrived, avail_idx, deltas)
+        san = sanitize_updates(deltas, np.flatnonzero(arrived), overrides,
+                               fcfg.clip_delta_norm, norms=delta_norms)
+        cause_counts["corrupt"] += len(san.dropped_nonfinite)
+        num_dropped_nf = len(san.dropped_nonfinite)
+        num_clipped = len(san.clipped)
+        mod_deltas = san.deltas
+        upload = np.zeros_like(sched.mask)
+        upload[san.kept] = True
+
+        # one-shot backfill: re-solve P1 over the surviving feasible
+        # devices with the residual bandwidth budget
+        num_bf_scheduled = num_backfilled = 0
+        if (inj.enabled and fcfg.backfill
+                and int(upload.sum()) < sched.num_scheduled):
+            bf_kept, bf_stats = self._backfill(
+                prob, sched, arrived, rf, avail_idx, bstar, upload_gains,
+                deltas, delta_norms, j)
+            num_bf_scheduled, bf_dropped_nf, bf_clipped, bf_deltas = bf_stats
+            cause_counts["corrupt"] += bf_dropped_nf
+            num_dropped_nf += bf_dropped_nf
+            num_clipped += bf_clipped
+            num_backfilled = len(bf_kept)
+            mod_deltas.update(bf_deltas)
+            upload[bf_kept] = True
+
+        g_errs = 0
+        if upload.any():
+            dev_up = dev_params
+            for i, dlt in mod_deltas.items():
+                if upload[i]:       # clipped / corrupted-but-kept uploads
+                    dev_up = set_device(dev_up, i, jax.tree.map(
+                        lambda o, d: o + d, self.params, dlt))
+            self.params = aggregate(dev_up, upload)
+            # Eq. 12: refresh G from the deltas that actually landed
+            up = np.flatnonzero(upload)
             dev_grads = [
-                jax.tree.map(lambda x: -x[i] / (cfg.tau * cfg.eta), deltas)
+                jax.tree.map(lambda x: -x / (cfg.tau * cfg.eta),
+                             mod_deltas[i]) if i in mod_deltas else
+                jax.tree.map(lambda x, i=i: -x[i] / (cfg.tau * cfg.eta),
+                             deltas)
                 for i in up]
             alphas = np.ones(len(up)) / len(up)
             try:
                 g = E.g_hat(dev_grads, alphas, p_sampled[up],
                             self.global_dist)
-                if g > 0:
+                if np.isfinite(g) and g > 0:
                     self.g_hat = g
                 if self.single_class:
                     self.g_hat_c = E.g_hat_per_class(
                         dev_grads, alphas, self.device_class[avail_idx][up],
                         p_sampled[up], self.global_dist, self.num_classes)
-            except Exception:
-                pass
+            except (ValueError, FloatingPointError, ZeroDivisionError):
+                g_errs += 1
+                self.g_refresh_errors += 1
+        elif inj.enabled:
+            # zero uploads landed: keep the previous params and decay the
+            # estimates toward their priors instead of freezing them
+            d = fcfg.estimate_decay
+            self.sigma_hat = d * self.sigma_hat + (1 - d) * cfg.sigma_init
+            self.g_hat = d * self.g_hat + (1 - d) * cfg.g_init
+            self.g_hat_c = d * self.g_hat_c + (1 - d) * cfg.g_init
 
+        num_attempted = sched.num_scheduled + num_bf_scheduled
         rec = {
             "round": j,
             "num_available": int(avail.sum()),
@@ -268,6 +399,15 @@ class FederatedTrainer:
             "sigma_hat": float(self.sigma_hat),
             "g_hat": float(self.g_hat),
             "mean_local_loss": float(dev_losses.mean()),
+            # failure telemetry (the fault layer as observability layer)
+            "num_uploaded": int(upload.sum()),
+            "num_failed": int(num_attempted - upload.sum()),
+            "failure_causes": cause_counts,
+            "num_backfilled": int(num_backfilled),
+            "num_sanitized": int(num_dropped_nf + num_clipped),
+            "num_clipped": int(num_clipped),
+            "num_infeasible": int((bstar[avail_idx] < 0).sum()),
+            "g_refresh_errors": int(g_errs),
         }
         if cfg.eval_every and (j % cfg.eval_every == 0):
             rec["test_accuracy"] = self.evaluate()

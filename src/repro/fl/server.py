@@ -14,6 +14,12 @@ def aggregate(device_params, mask: np.ndarray, weights: np.ndarray = None):
     (equal dataset sizes, paper Sec. V-A)."""
     mask = np.asarray(mask, dtype=np.float64)
     s = mask.sum()
+    if s == 0:
+        raise ValueError(
+            "aggregate() called with an all-False schedule mask — "
+            "averaging zero uploads would silently zero the model; the "
+            "caller must keep the previous round's params instead "
+            "(see FederatedTrainer.run_round's zero-upload path)")
     if weights is None:
         weights = mask / max(s, 1.0)
     else:

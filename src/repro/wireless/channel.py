@@ -77,6 +77,17 @@ class CellState:
         return self.params.tx_power_w * gains
 
 
+def apply_shadow_db(gains: np.ndarray, shadow_db: np.ndarray) -> np.ndarray:
+    """Fold an extra shadow-fading realisation (dB, positive = deeper
+    fade) into linear power gains.
+
+    The scheduler measures H_v once per round; a second draw at upload
+    time models the shadowing decorrelating between measurement and
+    transmission — the fault layer's upload-outage channel."""
+    return np.asarray(gains, dtype=np.float64) \
+        * 10.0 ** (-np.asarray(shadow_db, dtype=np.float64) / 10.0)
+
+
 def make_cell(num_devices: int, rng: np.random.Generator,
               params: ChannelParams = ChannelParams()) -> CellState:
     """Devices uniform in the disc of the cell radius."""

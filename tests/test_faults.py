@@ -1,0 +1,308 @@
+"""Fault injection + resilient round loop (repro.faults).
+
+Covers: the inert-by-default guarantee (zero fault probability ==
+bitwise the fault-free trainer), fault determinism across runs and
+scheduler backends, NaN/Inf sanitization, norm clipping, one-shot
+backfill, zero-upload degradation, the all-False aggregate guard, the
+Eq. 12 narrow-exception counter, and the B* = -1 infeasibility
+invariant across every scheduling policy.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.estimation as E
+from repro.configs.paper_cnn import PAPER_CNN_CIFAR10
+from repro.core import scheduling as S
+from repro.core.bandwidth import deadline_met, min_bandwidth
+from repro.data import (sort_and_partition, synthetic_image_dataset,
+                        train_test_split)
+from repro.faults import (FaultConfig, FaultInjector, RoundFaults,
+                          sanitize_updates)
+from repro.fl import FederatedTrainer, FLConfig, aggregate
+from repro.models import build_model
+from repro.wireless.channel import apply_shadow_db
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    ds = synthetic_image_dataset(num_classes=4, num_per_class=60,
+                                 image_size=16, noise=0.4, seed=0)
+    train, test = train_test_split(ds, seed=0)
+    cfg = dataclasses.replace(PAPER_CNN_CIFAR10.reduced(), num_classes=4)
+    return build_model(cfg), train, test
+
+
+def make_trainer(small_world, faults, backend="numpy", seed=0, V=8,
+                 **fl_kwargs):
+    model, train, test = small_world
+    rng = np.random.default_rng(seed)
+    parts = sort_and_partition(train.labels, V, 2, rng)
+    fl = FLConfig(num_devices=V, available_prob=0.8, batch_size=8, tau=1,
+                  scheduler="fedcgd-fscd", scheduler_backend=backend,
+                  eval_every=0, seed=seed, faults=faults, **fl_kwargs)
+    return FederatedTrainer(model, train, test, parts, fl)
+
+
+def params_finite(params) -> bool:
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(params))
+
+
+LOSSY = FaultConfig(outage_prob=0.3, dropout_prob=0.2,
+                    deadline_miss_prob=0.1, corrupt_prob=0.4,
+                    reshadow_std_db=6.0, clip_delta_norm=5.0)
+
+TELEMETRY_FIELDS = ("num_uploaded", "num_failed", "failure_causes",
+                    "num_backfilled", "num_sanitized", "num_clipped",
+                    "num_infeasible", "g_refresh_errors")
+
+
+# ---------------------------------------------------------------------------
+# unit level
+
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError):
+        FaultConfig(outage_prob=1.5)
+    with pytest.raises(ValueError):
+        FaultConfig(corrupt_modes=("garbage",))
+    with pytest.raises(ValueError):
+        FaultConfig(reshadow_std_db=-1.0)
+    assert not FaultConfig().injection_enabled
+    assert FaultConfig(outage_prob=0.1).injection_enabled
+
+
+def test_injector_inert_and_deterministic():
+    inj = FaultInjector(FaultConfig(), num_devices=16, base_seed=0)
+    rf = inj.draw(3)
+    assert not rf.dropout.any() and not rf.corrupt.any()
+    lossy = FaultInjector(LOSSY, num_devices=16, base_seed=0)
+    a, b = lossy.draw(7), lossy.draw(7)
+    for f in dataclasses.fields(RoundFaults):
+        np.testing.assert_array_equal(getattr(a, f.name), getattr(b, f.name))
+    # different rounds give different realisations
+    c = lossy.draw(8)
+    assert any((getattr(a, f.name) != getattr(c, f.name)).any()
+               for f in dataclasses.fields(RoundFaults))
+
+
+def test_apply_shadow_db_and_deadline_met():
+    gains = np.array([1e-9, 1e-9])
+    deeper = apply_shadow_db(gains, np.array([10.0, -10.0]))
+    np.testing.assert_allclose(deeper, [1e-10, 1e-8])
+    # a device allocated exactly B* meets the deadline at the measured
+    # gain and misses it once the gain fades
+    sh, noise, bits, d = 1e-9, 1e-17, 1e5, 2.0
+    b = min_bandwidth(bits, d, np.array([sh]), noise)
+    assert b[0] > 0
+    assert deadline_met(b, bits, d, np.array([sh]), noise)[0]
+    assert not deadline_met(b, bits, d, np.array([sh * 0.5]), noise)[0]
+    # infeasible marker is never met
+    assert not deadline_met(np.array([-1.0]), bits, d, np.array([sh]),
+                            noise)[0]
+
+
+def test_sanitize_nan_guard_and_clip():
+    deltas = {"w": jnp.stack([jnp.ones((3,)), jnp.ones((3,)) * 10.0,
+                              jnp.full((3,), jnp.nan)])}
+    norms = np.array([np.sqrt(3.0), np.sqrt(300.0), np.nan])
+    res = sanitize_updates(deltas, [0, 1, 2], {}, clip_norm=2.0, norms=norms)
+    assert res.kept == [0, 1]
+    assert res.dropped_nonfinite == [2]
+    assert res.clipped == [1]
+    clipped = res.deltas[1]["w"]
+    np.testing.assert_allclose(float(jnp.linalg.norm(clipped)), 2.0,
+                               rtol=1e-5)
+    # overrides shadow the stacked row
+    res2 = sanitize_updates(deltas, [0], {0: {"w": jnp.full((3,), jnp.inf)}},
+                            clip_norm=0.0)
+    assert res2.kept == [] and res2.dropped_nonfinite == [0]
+
+
+def test_aggregate_raises_on_empty_mask():
+    """Regression: an all-False mask used to silently zero the model."""
+    stacked = {"w": jnp.ones((3, 4))}
+    with pytest.raises(ValueError, match="all-False"):
+        aggregate(stacked, np.zeros(3, bool))
+
+
+# ---------------------------------------------------------------------------
+# infeasibility invariant (B* = -1 can never be scheduled)
+
+
+def _infeasible_problem(rng):
+    V, C = 10, 5
+    min_bw = rng.uniform(0.5, 1.5, V)
+    min_bw[[0, 3, 7]] = -1.0
+    return S.Problem(
+        p_dev=rng.dirichlet(np.ones(C) * 0.4, size=V),
+        global_dist=np.ones(C) / C, class_weights=np.ones(C),
+        sigma=1.0, batch_size=32, min_bw=min_bw, total_bw=6.0)
+
+
+def test_infeasible_never_scheduled_any_policy():
+    rng = np.random.default_rng(0)
+    prob = _infeasible_problem(rng)
+    bad = prob.min_bw < 0
+    solvers = {
+        "gs": lambda: S.greedy_scheduling(prob),
+        "fscd": lambda: S.fscd(prob),
+        "cd": lambda: S.coordinate_descent(prob, np.random.default_rng(1)),
+        "exhaustive": lambda: S.exhaustive(prob),
+        "bc": lambda: S.best_channel(prob, rng.random(10)),
+        "bn": lambda: S.best_norm(prob, rng.random(10)),
+        "poc": lambda: S.power_of_choice(prob, rng.random(10), 6,
+                                         np.random.default_rng(2)),
+        "fcbs": lambda: S.fed_cbs(prob, np.ones(10), 3),
+        "random": lambda: S.random_schedule(prob,
+                                            np.random.default_rng(3)),
+    }
+    for name, fn in solvers.items():
+        sched = fn()
+        assert not (sched.mask & bad).any(), name
+    for algo in ("gs", "fscd"):
+        for backend in ("numpy", "jax"):
+            sched = S.solve_many([prob], algo, backend=backend)[0]
+            assert not (sched.mask & bad).any(), (algo, backend)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_infeasible_never_scheduled_end_to_end(small_world, backend):
+    """Through min_bandwidth: a brutal deadline marks most devices
+    B* = -1 and no policy may ever schedule one of them."""
+    tr = make_trainer(small_world, FaultConfig(), backend=backend,
+                      deadline_s=1e-4)
+    seen = []
+
+    orig = tr._schedule
+
+    def spy(prob, avail_idx, gains, delta_norms, round_idx):
+        sched = orig(prob, avail_idx, gains, delta_norms, round_idx)
+        seen.append((prob.min_bw.copy(), sched.mask.copy()))
+        return sched
+
+    tr._schedule = spy
+    hist = tr.run(3)
+    assert any(h["num_infeasible"] > 0 for h in hist)
+    assert seen
+    for min_bw, mask in seen:
+        assert not (mask & (min_bw < 0)).any()
+
+
+# ---------------------------------------------------------------------------
+# trainer level: inertness, determinism, resilience
+
+
+def test_zero_fault_config_is_bitwise_inert(small_world):
+    """Outage probability 0 => the resilient loop IS the old loop: two
+    differently-seeded (but all-zero) fault configs cannot diverge."""
+    t1 = make_trainer(small_world, FaultConfig())
+    t2 = make_trainer(small_world, FaultConfig(seed=1234, backfill=False,
+                                               estimate_decay=0.9))
+    h1, h2 = t1.run(3), t2.run(3)
+    assert h1 == h2
+    for a, b in zip(jax.tree.leaves(t1.params), jax.tree.leaves(t2.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    for h in h1:
+        assert h["num_failed"] == 0 and h["num_sanitized"] == 0
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_fault_determinism_across_runs(small_world, backend):
+    """Same seed + same fault knobs => bitwise-identical history."""
+    t1 = make_trainer(small_world, LOSSY, backend=backend)
+    t2 = make_trainer(small_world, LOSSY, backend=backend)
+    assert t1.run(4) == t2.run(4)
+    for a, b in zip(jax.tree.leaves(t1.params), jax.tree.leaves(t2.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_lossy_run_survives_and_reports(small_world):
+    """Multi-round run with injected NaN/Inf deltas, outages and
+    dropouts completes without exceptions or non-finite params, and the
+    records carry the failure telemetry."""
+    tr = make_trainer(small_world, LOSSY)
+    hist = tr.run(6)
+    assert params_finite(tr.params)
+    for h in hist:
+        for field in TELEMETRY_FIELDS:
+            assert field in h, field
+        assert set(h["failure_causes"]) == {"dropout", "deadline", "outage",
+                                            "corrupt"}
+        assert np.isfinite(h["g_hat"]) and np.isfinite(h["sigma_hat"])
+    assert sum(h["num_failed"] for h in hist) > 0
+    assert sum(sum(h["failure_causes"].values()) for h in hist) > 0
+
+
+def test_backfill_reschedules_failed_slots(small_world):
+    """With heavy outages but clean backfill candidates, the one-shot
+    reschedule recovers uploads in the residual bandwidth."""
+    fc = FaultConfig(outage_prob=0.6, backfill=True)
+    tr = make_trainer(small_world, fc, V=12)
+    hist = tr.run(6)
+    assert sum(h["num_backfilled"] for h in hist) > 0
+    # backfilled uploads count toward the landed total
+    for h in hist:
+        assert h["num_uploaded"] <= h["num_scheduled"] + h["num_backfilled"]
+    # and disabling backfill recovers nothing
+    tr2 = make_trainer(small_world, dataclasses.replace(fc, backfill=False),
+                       V=12)
+    assert all(h["num_backfilled"] == 0 for h in tr2.run(3))
+
+
+def test_zero_upload_round_degrades_gracefully(small_world):
+    """dropout_prob = 1: nothing ever lands — params freeze, estimates
+    decay toward their priors, and no round raises."""
+    tr = make_trainer(small_world, FaultConfig(dropout_prob=1.0,
+                                               estimate_decay=0.5))
+    p0 = jax.tree.map(lambda x: np.asarray(x).copy(), tr.params)
+    hist = tr.run(3)
+    for h in hist:
+        assert h["num_uploaded"] == 0
+        assert h["num_failed"] == h["num_scheduled"]
+        assert h["failure_causes"]["dropout"] == h["num_scheduled"]
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(tr.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    # g_hat pulled toward its prior g_init
+    assert hist[-1]["g_hat"] == pytest.approx(tr.cfg.g_init)
+
+
+def test_nan_corruption_never_reaches_params(small_world):
+    """Every corrupted payload is NaN; the guard must drop them all."""
+    fc = FaultConfig(corrupt_prob=0.8, corrupt_modes=("nan", "inf"))
+    tr = make_trainer(small_world, fc)
+    hist = tr.run(4)
+    assert params_finite(tr.params)
+    assert sum(h["num_sanitized"] for h in hist) > 0
+    assert all(h["num_clipped"] == 0 for h in hist)
+
+
+def test_explode_corruption_is_clipped(small_world):
+    fc = FaultConfig(corrupt_prob=1.0, corrupt_modes=("explode",),
+                     corrupt_scale=1e6, clip_delta_norm=1.0)
+    tr = make_trainer(small_world, fc)
+    hist = tr.run(2)
+    assert params_finite(tr.params)
+    assert sum(h["num_clipped"] for h in hist) > 0
+    # with clipping on, exploded uploads still land
+    assert sum(h["num_uploaded"] for h in hist) > 0
+
+
+def test_g_refresh_error_counter(small_world, monkeypatch):
+    """Satellite: the Eq. 12 refresh guard is narrow and counted."""
+    def boom(*a, **k):
+        raise ValueError("synthetic Eq. 12 failure")
+    monkeypatch.setattr(E, "g_hat", boom)
+    tr = make_trainer(small_world, FaultConfig())
+    hist = tr.run(2)
+    assert all(h["g_refresh_errors"] == 1 for h in hist)
+    assert tr.g_refresh_errors == 2
+    # and an unexpected exception type is NOT swallowed
+    def boom2(*a, **k):
+        raise RuntimeError("must propagate")
+    monkeypatch.setattr(E, "g_hat", boom2)
+    with pytest.raises(RuntimeError):
+        tr.run_round(2)
