@@ -1,0 +1,183 @@
+"""Multi-cell round-engine throughput (the perf trajectory artifact).
+
+Two metrics per cell count C, on a micro CNN world (8x8 images,
+quarter-width paper CNN — small enough that engine overhead, not conv
+FLOPs, is what's measured):
+
+  * ``fresh``  — wall-clock per aggregation step of a *from-scratch
+    experiment*: construct the trainer(s), run R rounds.  This is what
+    "simulate C cells" costs in practice: C sequential
+    ``FederatedTrainer``s compile C identical round cores + finalize
+    helpers and issue C scheduling dispatches per round, while
+    ``MultiCellTrainer`` compiles one rolled core and schedules all
+    cells in one ``solve_many`` batch.  Process-global JAX warmup and
+    the module-level jit caches are paid before either arm.
+  * ``steady`` — wall-clock per aggregation step once everything is
+    compiled (the long-run marginal round cost).
+
+Also measured: ``fused_core`` vs ``legacy_core`` — the single-cell
+round hot path (local update + Eq. 10 sigmas + deltas + norms + host
+pull) as one fused program vs the pre-fusion per-device dispatch loop.
+
+Every number lands in ``BENCH_multicell.json`` (machine-readable; path
+override via ``BENCH_MULTICELL_JSON``) next to the CSV rows.
+``BENCH_MULTICELL_DRY=1`` shrinks the sweep to a CI-smoke size.
+``available_prob`` is pinned to 1.0 so every round reuses one compiled
+shape.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+
+def _world(V=8, seed=0):
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.data import (sort_and_partition, synthetic_image_dataset,
+                            train_test_split)
+    from repro.models import build_model
+
+    ds = synthetic_image_dataset(num_classes=2, num_per_class=40,
+                                 image_size=8, seed=seed)
+    train, test = train_test_split(ds, seed=seed)
+    parts = sort_and_partition(train.labels, V, 1,
+                               np.random.default_rng(seed))
+    model = build_model(CNNConfig(name="micro-cnn", kind="paper_cnn",
+                                  num_classes=2, image_size=8,
+                                  dropout=False, width=0.25))
+    return model, train, test, parts
+
+
+def _fl_cfg(V, cells=1, seed=0):
+    from repro.fl import FLConfig
+    return FLConfig(num_devices=V, available_prob=1.0, batch_size=2,
+                    tau=1, scheduler="fedcgd-fscd",
+                    scheduler_backend="jax", eval_every=0, seed=seed,
+                    num_cells=cells)
+
+
+def _legacy_core(tr, prep, sig1):
+    """The pre-fusion round hot path: one jit dispatch + host pull per
+    device for sigma, one ``float()`` sync per device for the delta
+    norms (what ``run_round`` did before the fused core)."""
+    import jax
+    from repro.core.estimation import tree_norm
+
+    dev_params, dev_losses = tr._local_update(tr.params, prep.batches,
+                                              prep.subkey)
+    dev_losses = np.asarray(dev_losses)
+    first = jax.tree.map(lambda x: x[:, 0], prep.batches)
+    sigma_v = np.array([
+        float(sig1(tr.params, jax.tree.map(lambda x, i=i: x[i], first)))
+        for i in range(len(prep.avail_idx))])
+    deltas = jax.tree.map(lambda new, old: new - old[None],
+                          dev_params, tr.params)
+    delta_norms = np.array([
+        float(tree_norm(jax.tree.map(lambda x, i=i: x[i], deltas)))
+        for i in range(len(prep.avail_idx))])
+    return dev_losses, sigma_v, delta_norms
+
+
+def _fused_core(tr, prep):
+    import jax
+    import jax.numpy as jnp
+
+    out = tr._round_core(jax.tree.map(lambda x: x[None], tr.params),
+                         jax.tree.map(lambda x: x[None], prep.batches),
+                         jnp.stack([prep.subkey]))
+    lh, sh, nh = jax.device_get((out[1], out[2], out[4]))
+    return lh[0], sh[0], nh[0]
+
+
+def run():
+    from repro.fl import FederatedTrainer, MultiCellTrainer
+
+    dry = os.environ.get("BENCH_MULTICELL_DRY", "") not in ("", "0")
+    V = 8
+    rounds = 2 if dry else 4
+    steady_rounds = 3 if dry else 8
+    cells_sweep = [1, 4] if dry else [1, 2, 4, 8]
+    results = {"dry": dry, "V": V, "rounds": rounds,
+               "fresh_multicell_us": {}, "fresh_sequential_us": {},
+               "fresh_speedup": {},
+               "steady_multicell_us": {}, "steady_sequential_us": {},
+               "steady_speedup": {}, "rounds_per_sec": {}}
+
+    model, train, test, parts = _world(V)
+    # global warmup: JAX backend init + the module-level jit caches that
+    # both arms share (single-cell shapes), outside every timer
+    warm = FederatedTrainer(model, train, test, parts, _fl_cfg(V, seed=99))
+    for j in range(2):
+        warm.run_round(j)
+
+    for C in cells_sweep:
+        t0 = time.perf_counter()
+        mc = MultiCellTrainer(model, train, test, parts,
+                              _fl_cfg(V, cells=C))
+        for j in range(rounds):
+            mc.run_round(j)
+        us_mc = (time.perf_counter() - t0) / rounds * 1e6
+
+        t0 = time.perf_counter()
+        seq = [FederatedTrainer(model, train, test, parts,
+                                _fl_cfg(V, seed=c)) for c in range(C)]
+        for j in range(rounds):
+            for tr in seq:
+                tr.run_round(j)
+        us_seq = (time.perf_counter() - t0) / rounds * 1e6
+
+        t0 = time.perf_counter()
+        for j in range(rounds, rounds + steady_rounds):
+            mc.run_round(j)
+        st_mc = (time.perf_counter() - t0) / steady_rounds * 1e6
+        t0 = time.perf_counter()
+        for j in range(rounds, rounds + steady_rounds):
+            for tr in seq:
+                tr.run_round(j)
+        st_seq = (time.perf_counter() - t0) / steady_rounds * 1e6
+
+        results["fresh_multicell_us"][str(C)] = us_mc
+        results["fresh_sequential_us"][str(C)] = us_seq
+        results["fresh_speedup"][str(C)] = us_seq / us_mc
+        results["steady_multicell_us"][str(C)] = st_mc
+        results["steady_sequential_us"][str(C)] = st_seq
+        results["steady_speedup"][str(C)] = st_seq / st_mc
+        results["rounds_per_sec"][str(C)] = 1e6 / st_mc
+        yield row(f"multicell_fresh_C{C}", us_mc,
+                  f"speedup={us_seq / us_mc:.2f}x")
+        yield row(f"multicell_steady_C{C}", st_mc,
+                  f"speedup={st_seq / st_mc:.2f}x")
+
+    # single-cell hot path: fused core vs the pre-fusion device loop
+    import jax
+    tr = FederatedTrainer(model, train, test, parts, _fl_cfg(V))
+    sig1 = jax.jit(tr._sigma_one)
+    prep = tr._prepare_round(0)
+    for fn, args in ((_fused_core, (tr, prep)),
+                     (_legacy_core, (tr, prep, sig1))):
+        fn(*args)                                  # warmup / compile
+    reps = 3 if dry else 10
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _fused_core(tr, prep)
+    us_fused = (time.perf_counter() - t0) / reps * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _legacy_core(tr, prep, sig1)
+    us_legacy = (time.perf_counter() - t0) / reps * 1e6
+    results["fused_core_us"] = us_fused
+    results["legacy_core_us"] = us_legacy
+    results["fusion_speedup"] = us_legacy / us_fused
+    yield row("fused_core", us_fused, f"V={V}")
+    yield row("legacy_core", us_legacy,
+              f"fusion_speedup={us_legacy / us_fused:.2f}x")
+
+    path = os.environ.get("BENCH_MULTICELL_JSON", "BENCH_multicell.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    yield row("json_artifact", 0.0, path)

@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
   fig9   -- G / sigma indicator dynamics
   eq9    -- Lambert-W bandwidth vs bisection oracle
   kernel -- Pallas kernels (interpret-mode correctness path)
+  multicell -- multi-cell round engine throughput (rounds/sec vs C,
+            fused vs pre-fusion round core; writes BENCH_multicell.json)
   roofline -- aggregates the dry-run artifacts (the Roofline table)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig3,tab2]
@@ -24,6 +26,7 @@ BENCHES = [
     ("eq9", "benchmarks.bench_bandwidth"),
     ("fig8", "benchmarks.bench_fl_dirichlet"),
     ("kernel", "benchmarks.bench_kernels"),
+    ("multicell", "benchmarks.bench_multicell"),
     ("roofline", "benchmarks.bench_roofline"),
     ("tab2", "benchmarks.bench_wemd_table"),
     ("fig9", "benchmarks.bench_gsigma"),

@@ -16,6 +16,12 @@ telemetry; individual knobs can be overridden, e.g.:
 
   PYTHONPATH=src python examples/wireless_fl.py --lossy \
       --outage-prob 0.5 --rounds 10 --devices 16
+
+``--cells C`` simulates C independent cells per aggregation step through
+the batched multi-cell engine (one fused local-update program + one
+``solve_many`` scheduling dispatch per round; FedCGD schedulers only):
+
+  PYTHONPATH=src python examples/wireless_fl.py --cells 4 --rounds 20
 """
 import argparse
 
@@ -25,7 +31,7 @@ from repro.configs.paper_cnn import PAPER_CNN_CIFAR10
 from repro.data import (apply_imbalance, dirichlet_partition,
                         sort_and_partition, synthetic_image_dataset,
                         train_test_split)
-from repro.fl import FederatedTrainer, FLConfig
+from repro.fl import FederatedTrainer, FLConfig, MultiCellTrainer
 from repro.faults import FaultConfig
 from repro.models import build_model
 
@@ -46,6 +52,13 @@ def main():
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--available-prob", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cells", type=int, default=1,
+                    help="independent cells per aggregation step "
+                         "(multi-cell engine; FedCGD schedulers only)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jax"],
+                    help="P1 scheduling backend (jax = the batched "
+                         "solve_many engine)")
     ap.add_argument("--lossy", action="store_true",
                     help="enable the wireless fault model + defenses")
     ap.add_argument("--outage-prob", type=float, default=None)
@@ -91,10 +104,20 @@ def main():
 
     fl = FLConfig(num_devices=args.devices,
                   available_prob=args.available_prob, batch_size=16,
-                  tau=args.tau, scheduler=args.scheduler, eval_every=5,
-                  seed=args.seed, faults=faults)
-    trainer = FederatedTrainer(model, train, test, parts, fl)
-    hist = trainer.run(args.rounds, verbose=True)
+                  tau=args.tau, scheduler=args.scheduler,
+                  scheduler_backend=args.backend, eval_every=5,
+                  seed=args.seed, num_cells=args.cells, faults=faults)
+    if args.cells > 1:
+        mc = MultiCellTrainer(model, train, test, parts, fl)
+        mc.run(args.rounds, verbose=True)
+        trainer = mc.cells[0]           # report cell 0 below
+        hist = trainer.history
+        print(f"\n(multi-cell: {args.cells} cells, "
+              f"{mc.solve_many_calls} scheduling dispatches over "
+              f"{args.rounds} rounds; reporting cell 0)")
+    else:
+        trainer = FederatedTrainer(model, train, test, parts, fl)
+        hist = trainer.run(args.rounds, verbose=True)
 
     accs = [h["test_accuracy"] for h in hist if "test_accuracy" in h]
     scheds = [h["num_scheduled"] for h in hist]

@@ -22,7 +22,8 @@ class CNNConfig:
     channels: int = 3
     dropout: bool = True
     gn_groups: int = 8        # for resnet18_gn
-    width: int = 1            # channel multiplier (reduced smoke variants)
+    width: float = 1          # channel multiplier; may be fractional
+    #   (micro benchmark variants round channels to >= 1)
 
     def reduced(self) -> "CNNConfig":
         return dataclasses.replace(self, name=self.name + "-reduced",

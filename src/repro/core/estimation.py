@@ -101,19 +101,40 @@ def device_grad_estimate(w_new, w_old, tau: int, eta: float):
     return jax.tree.map(lambda a, b: (b - a) / (tau * eta), w_new, w_old)
 
 
+@jax.jit
+def _centered_grad_norms(grads_stacked, alphas):
+    """[U] norms ||grad_v - sum_u alpha_u grad_u|| from a stacked [U, ...]
+    gradient pytree — the Eq. 12 numerators in one fused program."""
+    def center(g):
+        a = alphas.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+        return g - (g * a).sum(0)[None]
+    return jax.vmap(tree_norm)(jax.tree.map(center, grads_stacked))
+
+
+def _grad_deviation_norms(device_grads, alphas) -> np.ndarray:
+    """Accepts a list of per-device pytrees *or* one pytree with a
+    leading [U] device axis; returns the [U] deviation norms with a
+    single device dispatch + host pull."""
+    if isinstance(device_grads, (list, tuple)):
+        device_grads = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *device_grads)
+    alphas = jnp.asarray(np.asarray(alphas, dtype=np.float64),
+                         dtype=jnp.float32)
+    return np.asarray(_centered_grad_norms(device_grads, alphas))
+
+
 def g_hat(device_grads, alphas, p_dev: np.ndarray,
           global_dist: np.ndarray) -> float:
-    """Eq. 12: max_v ||grad_v - grad_global|| / ||p_v - p||_1."""
-    alphas = np.asarray(alphas, dtype=np.float64)
-    ghat_global = tree_weighted_sum(device_grads, list(alphas))
-    best = 0.0
-    for v, gv in enumerate(device_grads):
-        l1 = float(np.abs(p_dev[v] - global_dist).sum())
-        if l1 < 1e-9:
-            continue
-        num = float(tree_norm(tree_sub(gv, ghat_global)))
-        best = max(best, num / l1)
-    return best
+    """Eq. 12: max_v ||grad_v - grad_global|| / ||p_v - p||_1.
+
+    ``device_grads`` is a list of per-device pytrees or a stacked pytree
+    with a leading [U] device axis (the trainer's fused path)."""
+    norms = _grad_deviation_norms(device_grads, alphas)
+    l1 = np.abs(np.asarray(p_dev) - np.asarray(global_dist)).sum(axis=1)
+    valid = l1 >= 1e-9
+    if not valid.any():
+        return 0.0
+    return float(np.max(norms[valid] / l1[valid]))
 
 
 def g_hat_per_class(device_grads, alphas, device_class: np.ndarray,
@@ -122,16 +143,14 @@ def g_hat_per_class(device_grads, alphas, device_class: np.ndarray,
     """Per-class G_c when each device holds a single class (the paper's
     FedCGD-FSCD-Gc variant): G_c = max_{v in Pi_c} ||grad_v - grad|| /
     ||p_v - p||_1."""
-    alphas = np.asarray(alphas, dtype=np.float64)
-    ghat_global = tree_weighted_sum(device_grads, list(alphas))
+    norms = _grad_deviation_norms(device_grads, alphas)
+    l1 = np.abs(np.asarray(p_dev) - np.asarray(global_dist)).sum(axis=1)
     G = np.zeros(num_classes)
-    for v, gv in enumerate(device_grads):
-        c = int(device_class[v])
-        l1 = float(np.abs(p_dev[v] - global_dist).sum())
-        if l1 < 1e-9:
+    for v in range(len(norms)):
+        if l1[v] < 1e-9:
             continue
-        num = float(tree_norm(tree_sub(gv, ghat_global)))
-        G[c] = max(G[c], num / l1)
+        c = int(device_class[v])
+        G[c] = max(G[c], float(norms[v]) / l1[v])
     # classes never seen this round fall back to the max (conservative)
     fallback = G.max() if G.max() > 0 else 1.0
     return np.where(G > 0, G, fallback)

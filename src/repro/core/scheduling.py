@@ -249,13 +249,19 @@ SOLVE_MANY_ALGORITHMS = ("gs", "fscd", "cd")
 
 
 def solve_many(problems: Sequence[Problem], algorithm: str = "fscd",
-               backend: str = "jax", max_inner: int = 200) -> List[Schedule]:
+               backend: str = "jax", max_inner: int = 200,
+               pallas: Optional[bool] = None) -> List[Schedule]:
     """Solve a batch of same-shaped Problems.
 
     ``backend="numpy"`` loops the reference per-problem solvers;
     ``backend="jax"`` runs the batched float64 engine (identical masks,
     one vectorized pass over the whole batch).  ``algorithm="cd"`` has
     no batched implementation and always uses the numpy loop.
+
+    ``pallas`` routes the jax backend's f32 candidate scans through the
+    Pallas ``wemd_swap`` / ``wemd_add`` kernels (None = auto: only on a
+    TPU backend).  Scheduling decisions still go through the exact-f64
+    top-K re-evaluation, so masks stay bitwise-equal to numpy.
     """
     problems = list(problems)
     if algorithm not in SOLVE_MANY_ALGORITHMS:
@@ -271,8 +277,8 @@ def solve_many(problems: Sequence[Problem], algorithm: str = "fscd",
         raise ValueError(f"unknown backend {backend!r}")
     from repro.core import scheduling_jax as SJ
     if algorithm == "gs":
-        return SJ.solve_many_gs(problems)
-    return SJ.solve_many_fscd(problems, max_inner=max_inner)
+        return SJ.solve_many_gs(problems, pallas=pallas)
+    return SJ.solve_many_fscd(problems, max_inner=max_inner, pallas=pallas)
 
 
 # ---------------------------------------------------------------------------

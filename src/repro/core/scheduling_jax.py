@@ -18,10 +18,12 @@ solver over a problem axis:
     ``best``/early-exit bookkeeping of the numpy outer loop is replayed
     on the host from per-lane results.
 
-The float64 decisions make this the parity backend on CPU; the float32
-Pallas kernels in ``repro.kernels`` (``wemd_swap`` / ``wemd_add``)
-implement the same swap/add matrices device-resident for TPU fleets
-where ulp-parity with the host solver is not required.  On a single
+The float64 decisions make this the parity backend on CPU.  The float32
+Pallas kernels in ``repro.kernels`` (``wemd_swap`` / ``wemd_add``) can
+be routed in for the candidate *scan* (``pallas=True``, or automatically
+on a TPU backend): the kernels produce the f32 swap/add matrices and the
+exact-f64 top-K re-evaluation still makes every accept/swap decision, so
+the selected masks remain bitwise-equal to numpy.  On a single
 CPU core the batched FSCD path roughly matches the numpy loop (the
 lanes are data-parallel, so the win scales with cores/accelerator);
 batched GS is ~8x even single-core.
@@ -42,17 +44,31 @@ def _enable_x64():
     return enable_x64()
 
 
+def _use_pallas(pallas) -> bool:
+    """Kernel routing: explicit override wins, else auto-on-TPU.  The
+    Pallas kernels compute the f32 candidate matrices; ranking still goes
+    through the exact-f64 top-K re-evaluation, so the selected masks stay
+    bitwise-equal to the numpy solvers (verified in tests with the
+    interpret-mode kernels on CPU)."""
+    if pallas is not None:
+        return bool(pallas)
+    import jax
+    return jax.default_backend() == "tpu"
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 1 (GS), batched over problems
 
 
-def _gs_batch_impl(p_dev, gd, cw, sigma, batch_size, min_bw, total_bw):
+def _gs_batch_impl(p_dev, gd, cw, sigma, batch_size, min_bw, total_bw,
+                   use_pallas=False):
     import jax
     import jax.numpy as jnp
 
     B, V, C = p_dev.shape
     feas = (min_bw >= 0) & (min_bw <= total_bw[:, None])
     sigma_b = sigma / jnp.sqrt(batch_size)
+    K = min(16, V)
 
     def cond(carry):
         return carry[4].any()
@@ -63,12 +79,33 @@ def _gs_batch_impl(p_dev, gd, cw, sigma, batch_size, min_bw, total_bw):
         act = active & cand.any(axis=1)
         iters = iters + act.astype(jnp.int32)
         size = jnp.sum(mask, axis=1).astype(p_dev.dtype)
-        # wemd_add_candidates, batched
-        new = (p_sum[:, None, :] + p_dev) / (size[:, None, None] + 1.0)
-        w_new = jnp.einsum("bvc,bc->bv", jnp.abs(new - gd[:, None, :]), cw)
-        w_new = jnp.where(cand, w_new, jnp.inf)
-        k = jnp.argmin(w_new, axis=1)
-        wk = jnp.take_along_axis(w_new, k[:, None], 1)[:, 0]
+        if use_pallas:
+            # f32 Pallas add-candidate row, then exact f64 (numpy op
+            # order) re-evaluation of the top K — ranking error ~1e-6
+            # vs candidate gaps O(1e-3), so the true argmin is inside K
+            from repro.kernels import ops
+            w32 = ops.wemd_add(p_sum, p_dev, gd, cw, size)
+            w32 = jnp.where(cand, w32, jnp.float32(jnp.inf))
+            _, topk = jax.lax.top_k(-w32, K)                     # [B,K]
+            p_k = jnp.take_along_axis(p_dev, topk[:, :, None], 1)
+            new_k = (p_sum[:, None, :] + p_k) / (size[:, None, None] + 1.0)
+            w64k = jnp.einsum("bkc,bc->bk",
+                              jnp.abs(new_k - gd[:, None, :]), cw)
+            valid_k = jnp.take_along_axis(cand, topk, 1)
+            w64k = jnp.where(valid_k, w64k, jnp.inf)
+            wk = w64k.min(axis=1)
+            # numpy argmin tie-break: min device index among exact minima
+            k = jnp.minimum(
+                jnp.where(valid_k & (w64k == wk[:, None]), topk,
+                          V).min(axis=1), V - 1)
+        else:
+            # wemd_add_candidates, batched, all-f64
+            new = (p_sum[:, None, :] + p_dev) / (size[:, None, None] + 1.0)
+            w_new = jnp.einsum("bvc,bc->bv",
+                               jnp.abs(new - gd[:, None, :]), cw)
+            w_new = jnp.where(cand, w_new, jnp.inf)
+            k = jnp.argmin(w_new, axis=1)
+            wk = jnp.take_along_axis(w_new, k[:, None], 1)[:, 0]
         inv_sqrt = jnp.where(size > 0,
                              1.0 / jnp.sqrt(jnp.where(size > 0, size, 1.0)),
                              jnp.inf)
@@ -109,7 +146,7 @@ def _gs_batch_impl(p_dev, gd, cw, sigma, batch_size, min_bw, total_bw):
 
 def _fscd_phase_impl(p_dev, gd, cw, bw, feas, total_bw, s_lane,
                      members, mask, p_sum, used, w_cur, act, iters,
-                     max_inner, phase_steps):
+                     max_inner, phase_steps, use_pallas=False):
     import jax
     import jax.numpy as jnp
 
@@ -135,11 +172,19 @@ def _fscd_phase_impl(p_dev, gd, cw, bw, feas, total_bw, s_lane,
         # float64 re-evaluation (numpy's op order) of the K best
         # candidates — f32 ranking error is ~1e-6 while candidate gaps
         # are O(1e-3), so the true minimum is always inside the top K
-        a = ((p_sum[:, None, :] - p_mem) / sf_safe[:, None, None]
-             - gd[:, None, :]).astype(f32)
-        b = (p_dev / sf_safe[:, None, None]).astype(f32)
-        w32 = jnp.sum(jnp.abs(a[:, :, None, :] + b[:, None, :, :])
-                      * cw[:, None, None, :].astype(f32), axis=-1)  # [L,R,V]
+        if use_pallas:
+            # dense [L,V,V] f32 swap matrix from the Pallas kernel,
+            # gathered down to the member rows
+            from repro.kernels import ops
+            w_dense = ops.wemd_swap(p_sum, p_dev, gd, cw, sf_safe)
+            w32 = jnp.take_along_axis(w_dense, members[:, :, None], 1)
+        else:
+            a = ((p_sum[:, None, :] - p_mem) / sf_safe[:, None, None]
+                 - gd[:, None, :]).astype(f32)
+            b = (p_dev / sf_safe[:, None, None]).astype(f32)
+            w32 = jnp.sum(jnp.abs(a[:, :, None, :] + b[:, None, :, :])
+                          * cw[:, None, None, :].astype(f32),
+                          axis=-1)                              # [L,R,V]
         bw_mem = jnp.take_along_axis(bw, members, 1)
         bw_new = (used[:, None, None] - bw_mem[:, :, None]) + bw[:, None, :]
         ok = valid_r[:, :, None] & (~mask & feas)[:, None, :] \
@@ -224,12 +269,16 @@ def _stack(problems: Sequence[SCH.Problem]):
     }
 
 
-def solve_many_gs(problems: Sequence[SCH.Problem]) -> List[SCH.Schedule]:
+def solve_many_gs(problems: Sequence[SCH.Problem],
+                  pallas: bool | None = None) -> List[SCH.Schedule]:
     st = _stack(problems)
+    up = _use_pallas(pallas)
     with _enable_x64():
-        fn = _jitted("gs", _gs_batch_impl)
+        fn = _jitted(f"gs_p{int(up)}", _gs_batch_impl,
+                     static_argnums=(7,))
         masks, iters = fn(st["p_dev"], st["gd"], st["cw"], st["sigma"],
-                          st["batch_size"], st["min_bw"], st["total_bw"])
+                          st["batch_size"], st["min_bw"], st["total_bw"],
+                          up)
         masks, iters = np.asarray(masks), np.asarray(iters)
     return [SCH._make_schedule(p, masks[b], int(iters[b]), "GS")
             for b, p in enumerate(problems)]
@@ -246,7 +295,8 @@ def _bucket(n: int) -> int:
 
 def solve_many_fscd(problems: Sequence[SCH.Problem],
                     max_inner: int = 200,
-                    phase_steps: int = 4) -> List[SCH.Schedule]:
+                    phase_steps: int = 4,
+                    pallas: bool | None = None) -> List[SCH.Schedule]:
     from repro.core import wemd as WE
 
     st = _stack(problems)
@@ -295,9 +345,10 @@ def solve_many_fscd(problems: Sequence[SCH.Problem],
         # shrinks as lanes converge instead of spinning until the
         # slowest lane is done
         alive = np.arange(L)
+        up = _use_pallas(pallas)
         with _enable_x64():
-            fn = _jitted("fscd_phase", _fscd_phase_impl,
-                         static_argnums=(14, 15))
+            fn = _jitted(f"fscd_phase_p{int(up)}", _fscd_phase_impl,
+                         static_argnums=(14, 15, 16))
             while alive.size:
                 n = alive.size
                 sel = np.concatenate(
@@ -308,7 +359,7 @@ def solve_many_fscd(problems: Sequence[SCH.Problem],
                          feas_l[sel], tot_l[sel], s_lane[sel],
                          members[sel], masks[sel], p_sum[sel], used[sel],
                          w_cur[sel], act_in, iters[sel],
-                         int(max_inner), int(phase_steps))
+                         int(max_inner), int(phase_steps), up)
                 o = [np.asarray(x)[:n] for x in out]
                 members[alive], masks[alive], p_sum[alive] = o[0], o[1], o[2]
                 used[alive], w_cur[alive] = o[3], o[4]

@@ -1,4 +1,6 @@
 from repro.fl.rounds import FederatedTrainer, FLConfig  # noqa: F401
-from repro.fl.client import make_local_update, payload_bits  # noqa: F401
+from repro.fl.multicell import MultiCellTrainer  # noqa: F401
+from repro.fl.client import (make_local_update, make_round_core,  # noqa: F401
+                             payload_bits)
 from repro.fl.server import aggregate  # noqa: F401
 from repro.faults import FaultConfig, FaultInjector  # noqa: F401

@@ -3,6 +3,13 @@
 ``make_local_update`` returns a jitted function that runs every available
 device's local update *in one XLA program* via vmap over the device axis —
 the single-host simulation analogue of devices computing in parallel.
+
+``make_round_core`` fuses the whole client half of a round — local update
+(Eq. 1), per-device sigma estimation (Eq. 10), model deltas and their L2
+norms — into one XLA program batched over a leading *cell* axis, so the
+host pulls everything scheduling needs in a single device->host sync.
+``FederatedTrainer`` calls it with one cell; ``MultiCellTrainer`` drives C
+cells per aggregation step through the same program.
 """
 from __future__ import annotations
 
@@ -11,6 +18,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.estimation import tree_norm
 
 
 def make_local_update(loss_fn: Callable, eta: float, tau: int):
@@ -47,11 +56,93 @@ def make_local_update(loss_fn: Callable, eta: float, tau: int):
     return update
 
 
+def make_round_core(loss_fn: Callable, sigma_fn: Callable, eta: float,
+                    tau: int, cell_axis: str = "auto"):
+    """Fused device-resident round core, batched over cells.
+
+    loss_fn(params, batch, rng) -> (loss, metrics);
+    sigma_fn(params, batch) -> scalar sigma_v (Eq. 10).
+
+    Returns core(params, batches, rngs) where ``params`` is a pytree with
+    a leading [C] cell axis (each cell's broadcast model), ``batches`` a
+    pytree with leading dims [C, V, tau, batch, ...] and ``rngs`` a [C]
+    key array.  One XLA program computes, per cell:
+
+      dev_params  [C, V, ...]  post-local-update device models
+      losses      [C, V]       mean local loss per device
+      sigma_v     [C, V]       Eq. 10 on each device's first batch
+      deltas      [C, V, ...]  dev_params - params (the upload payload)
+      delta_norms [C, V]       per-device L2 norms of the deltas
+
+    so the trainer makes exactly one host sync between local update and
+    scheduling (down from O(V) per-device pulls).
+
+    ``cell_axis`` picks how the cell axis is executed inside the one
+    program: ``"vmap"`` batches it (cells run lockstep in parallel —
+    right for accelerators), ``"scan"`` rolls it with ``jax.lax.map``
+    (the compiled body is the single-cell program, so C cells compile
+    once and each cell's numerics are *identical* to a standalone
+    trainer's — right for CPU, where vmapping per-device conv weights
+    lowers to C*V-group grouped convolutions that are expensive to
+    compile and execute).  ``"auto"`` scans on CPU, vmaps elsewhere."""
+
+    def one_device(params, dev_batches, rng):
+        def step(carry, xs):
+            p, r = carry
+            batch, = xs
+            r, sub = jax.random.split(r)
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(p, batch, sub)
+            p = jax.tree.map(lambda a, g: a - eta * g.astype(a.dtype),
+                             p, grads)
+            return (p, r), loss
+
+        (params, _), losses = jax.lax.scan(
+            step, (params, rng), (dev_batches,))
+        return params, losses.mean()
+
+    def one_cell(params, batches, rng):
+        num_dev = jax.tree.leaves(batches)[0].shape[0]
+        rngs = jax.random.split(rng, num_dev)
+        dev_params, losses = jax.vmap(one_device, in_axes=(None, 0, 0))(
+            params, batches, rngs)
+        first = jax.tree.map(lambda x: x[:, 0], batches)
+        sigma_v = jax.vmap(sigma_fn, in_axes=(None, 0))(params, first)
+        deltas = jax.tree.map(lambda new, old: new - old[None],
+                              dev_params, params)
+        delta_norms = jax.vmap(tree_norm)(deltas)
+        return dev_params, losses, sigma_v, deltas, delta_norms
+
+    if cell_axis == "auto":
+        cell_axis = "scan" if jax.default_backend() == "cpu" else "vmap"
+    if cell_axis == "vmap":
+        return jax.jit(jax.vmap(one_cell))
+    if cell_axis != "scan":
+        raise ValueError(f"cell_axis must be auto|vmap|scan, "
+                         f"got {cell_axis!r}")
+
+    @jax.jit
+    def core(params_c, batches_c, rngs_c):
+        return jax.lax.map(lambda a: one_cell(*a),
+                           (params_c, batches_c, rngs_c))
+
+    return core
+
+
 def set_device(stacked, v: int, tree):
     """Write one device's pytree into the stacked [V, ...] upload buffer
     (inverse of ``server.select_device``) — used by the fault layer to
     substitute corrupted or clipped uploads."""
     return jax.tree.map(lambda s, x: s.at[v].set(x), stacked, tree)
+
+
+def set_devices(stacked, idx, trees_stacked):
+    """Write many devices' pytrees into the stacked [V, ...] buffer in a
+    single scatter per leaf (batched ``set_device``): ``idx`` [K] device
+    indices, ``trees_stacked`` a pytree with leading [K] axis."""
+    idx = jnp.asarray(idx)
+    return jax.tree.map(lambda s, x: s.at[idx].set(x.astype(s.dtype)),
+                        stacked, trees_stacked)
 
 
 def model_delta(new_params, old_params):

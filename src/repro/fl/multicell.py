@@ -1,0 +1,236 @@
+"""Multi-cell round engine: C independent cells per aggregation step.
+
+The paper evaluates P1 per cell per round; a deployment runs many cells
+concurrently (one edge server each).  ``MultiCellTrainer`` simulates C
+independent ``FederatedTrainer`` cells — separate seeds, channel
+geometries, model replicas, fault streams — but drives every round
+through
+
+  * ONE vmapped local-update program: the fused round core from
+    ``repro.fl.client.make_round_core`` with leading axes
+    [cell, device, tau] computes all cells' local SGD, Eq. 10 sigmas,
+    deltas and delta norms in a single XLA dispatch + one host sync;
+  * ONE ``solve_many`` scheduling dispatch: the C per-cell P1 instances
+    are padded to a common device count and solved as a single batch by
+    the PR 6 engine (jax backend; the f32 Pallas wemd kernels route in
+    on TPU backends via ``FLConfig.scheduler_pallas``).
+
+Cells are *padded, not truncated*: a cell with fewer available devices
+than the round's max repeats its first device's batch (sliced off after
+the core) and pads its P1 instance with zero-distribution, infeasible
+(``min_bw = -1``) device rows the solver can never schedule.  With
+``num_cells = 1`` nothing is padded and every dispatch is the same
+program ``FederatedTrainer`` runs, so the single-cell history is
+reproduced bitwise (asserted in tests for both scheduler backends).
+
+Faulty rounds may issue one extra batched ``solve_many`` for the cells
+that back-fill failed uploads; fault-free rounds make exactly one
+scheduling dispatch (``solve_many_calls`` counts them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduling as S
+from repro.data.datasets import ArrayDataset
+from repro.fl.rounds import FederatedTrainer, FLConfig
+from repro.models.registry import Model
+
+# schedulers with a batched solve_many implementation
+MULTICELL_SCHEDULERS = ("fedcgd-fscd", "fedcgd-gs", "fedcgd-fscd-gc")
+
+
+def _pad_batches(batches, pad: int):
+    """Grow the device axis by ``pad`` rows repeating device 0 (the rows
+    are computed and discarded; repeating a real batch keeps the padded
+    lanes numerically tame)."""
+    if pad == 0:
+        return batches
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])], axis=0),
+        batches)
+
+
+def _pad_problems(probs: Sequence[S.Problem]) -> List[S.Problem]:
+    """Pad P1 instances to a common device count with zero-distribution,
+    infeasible rows (min_bw = -1): the solvers can never schedule them,
+    and real-device decisions are unchanged (candidate values are
+    computed per device; infeasible rows rank as +inf)."""
+    vmax = max(p.num_devices for p in probs)
+    out = []
+    for p in probs:
+        pad = vmax - p.num_devices
+        if pad == 0:
+            out.append(p)
+            continue
+        out.append(dataclasses.replace(
+            p,
+            p_dev=np.concatenate(
+                [np.asarray(p.p_dev),
+                 np.zeros((pad, np.asarray(p.p_dev).shape[1]))]),
+            min_bw=np.concatenate(
+                [np.asarray(p.min_bw, np.float64), np.full(pad, -1.0)])))
+    return out
+
+
+def _slice_schedule(sched: S.Schedule, n: int) -> S.Schedule:
+    """Drop the padded device rows from a batched solve (they are never
+    scheduled, so the counts/objective are unaffected)."""
+    if len(sched.mask) == n:
+        return sched
+    return dataclasses.replace(sched, mask=sched.mask[:n])
+
+
+class MultiCellTrainer:
+    """C FederatedTrainer cells advanced in lock-step, one fused XLA
+    round core + one batched scheduling dispatch per aggregation step."""
+
+    def __init__(self, model: Model, train: ArrayDataset,
+                 test: ArrayDataset, device_indices, cfg: FLConfig,
+                 cell_seeds: Optional[Sequence[int]] = None):
+        if cfg.scheduler not in MULTICELL_SCHEDULERS:
+            raise ValueError(
+                f"MultiCellTrainer requires a batched scheduler "
+                f"{MULTICELL_SCHEDULERS}, got {cfg.scheduler!r}")
+        C = cfg.num_cells
+        if C < 1:
+            raise ValueError(f"num_cells must be >= 1, got {C}")
+        if cell_seeds is None:
+            cell_seeds = [cfg.seed + c for c in range(C)]
+        if len(cell_seeds) != C:
+            raise ValueError(f"need {C} cell seeds, got {len(cell_seeds)}")
+        # one shared device partition, or one partition per cell
+        per_cell = (isinstance(device_indices, (list, tuple))
+                    and len(device_indices) == C
+                    and isinstance(device_indices[0], (list, tuple)))
+        parts = (list(device_indices) if per_cell
+                 else [device_indices] * C)
+
+        self.cfg = cfg
+        self.cells: List[FederatedTrainer] = [
+            FederatedTrainer(model, train, test, parts[c],
+                             dataclasses.replace(cfg, seed=cell_seeds[c]))
+            for c in range(C)]
+        # every cell runs the same architecture: share cell 0's compiled
+        # round core so C=1 executes the exact program FederatedTrainer
+        # runs (bitwise parity) and C>1 reuses one compilation; the
+        # per-trainer jitted finalize helpers are shared for the same
+        # reason (C standalone trainers would compile C identical copies)
+        self._core = self.cells[0]._round_core
+        for cell in self.cells[1:]:
+            cell._round_core = self.cells[0]._round_core
+            cell._sigma_all = self.cells[0]._sigma_all
+            cell._agg_core = self.cells[0]._agg_core
+            cell._grads_core = self.cells[0]._grads_core
+        # one dispatch returning every cell's slice of the stacked core
+        # outputs (vs. an eager per-cell-per-leaf slice loop): the rows
+        # are NOT trimmed to the cell's device count — padded rows carry
+        # zero aggregation weight and are never indexed by the upload /
+        # backfill phases, and at C=1 nothing is padded to begin with
+        self._unstack = jax.jit(lambda t: tuple(
+            jax.tree.map(lambda x, c=c: x[c], t) for c in range(C)))
+        self._algorithm = "gs" if cfg.scheduler == "fedcgd-gs" else "fscd"
+        self.solve_many_calls = 0        # scheduling dispatches issued
+        self.history: List[List[Dict]] = []
+
+    @property
+    def num_cells(self) -> int:
+        return len(self.cells)
+
+    # ------------------------------------------------------------------
+    def _solve_batch(self, probs: Sequence[S.Problem]) -> List[S.Schedule]:
+        cfg = self.cfg
+        self.solve_many_calls += 1
+        return S.solve_many(_pad_problems(probs), self._algorithm,
+                            backend=cfg.scheduler_backend,
+                            pallas=cfg.scheduler_pallas)
+
+    def run_round(self, j: int) -> List[Dict]:
+        cells = self.cells
+
+        # host-side prep per cell (availability, channel, batches) — the
+        # per-cell numpy RNG streams stay identical to standalone cells
+        preps = [cell._prepare_round(j) for cell in cells]
+        n_av = [len(p.avail_idx) for p in preps]
+        vmax = max(n_av)
+        for cell in cells:
+            cell.last_round_host_syncs = 0
+
+        # ONE fused core dispatch: [C, Vmax, ...] local update + sigma +
+        # deltas + norms, then one host pull for every scheduling input
+        params_c = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[cell.params for cell in cells])
+        batches_c = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_pad_batches(p.batches, vmax - n) for p, n in zip(preps,
+                                                                n_av)])
+        keys_c = jnp.stack([p.subkey for p in preps])
+        dev_params_c, losses_c, sigma_c, deltas_c, norms_c = \
+            self._core(params_c, batches_c, keys_c)
+        lh, sh, nh = jax.device_get((losses_c, sigma_c, norms_c))
+
+        unstacked = self._unstack((dev_params_c, deltas_c))
+        probs, per_cell = [], []
+        for c, (cell, prep, n) in enumerate(zip(cells, preps, n_av)):
+            cell.last_round_host_syncs += 1
+            dev_losses = np.asarray(lh[c, :n], dtype=np.float64)
+            sigma_v = np.asarray(sh[c, :n], dtype=np.float64)
+            delta_norms = np.asarray(nh[c, :n], dtype=np.float64)
+            dev_params, deltas = unstacked[c]
+            cell._post_core(prep, dev_losses, sigma_v)
+            probs.append(cell._make_problem(prep))
+            per_cell.append((dev_losses, delta_norms, dev_params, deltas))
+
+        # ONE scheduling dispatch for all C cells
+        scheds = [_slice_schedule(s, n)
+                  for s, n in zip(self._solve_batch(probs), n_av)]
+
+        # upload phase per cell; collect the cells that want a backfill
+        states, bf_idx, bf_probs = [], [], []
+        for c, (cell, prep, sched) in enumerate(zip(cells, preps, scheds)):
+            _, delta_norms, _, deltas = per_cell[c]
+            st = cell._upload_phase(j, prep, sched, deltas, delta_norms)
+            states.append(st)
+            if cell._wants_backfill(st, sched):
+                pb = cell._backfill_problem(probs[c], sched, st, prep)
+                if pb is not None:
+                    bf_idx.append(c)
+                    bf_probs.append(pb)
+
+        # at most one extra batched dispatch for the backfilling cells
+        if bf_probs:
+            for c, bf in zip(bf_idx, self._solve_batch(bf_probs)):
+                _, delta_norms, _, deltas = per_cell[c]
+                cells[c]._apply_backfill(
+                    _slice_schedule(bf, n_av[c]), states[c], preps[c],
+                    deltas, delta_norms)
+
+        recs = []
+        for c, (cell, prep, sched, st) in enumerate(
+                zip(cells, preps, scheds, states)):
+            dev_losses, _, dev_params, deltas = per_cell[c]
+            pad = vmax - n_av[c]
+            if pad:     # match the untrimmed [Vmax] trees: padded rows
+                # enter Eq. 2 with weight 0 and are never G-refreshed
+                st.upload = np.concatenate(
+                    [st.upload, np.zeros(pad, bool)])
+            recs.append(cell._finalize_round(j, prep, sched, st,
+                                             dev_params, deltas,
+                                             dev_losses))
+        self.history.append(recs)
+        return recs
+
+    # ------------------------------------------------------------------
+    def run(self, num_rounds: int, verbose: bool = False) -> List[List[Dict]]:
+        for j in range(num_rounds):
+            recs = self.run_round(j)
+            if verbose and ("test_accuracy" in recs[0]):
+                accs = " ".join(f"{r['test_accuracy']:.3f}" for r in recs)
+                print(f"round {j:4d} acc per cell: {accs}")
+        return self.history

@@ -24,6 +24,18 @@ carries failure telemetry (``num_failed``, ``failure_causes``,
 ``num_backfilled``, ``num_sanitized``, ...), so the fault layer doubles
 as an observability layer.
 
+The round hot path is *fused*: one cell-batched XLA program
+(``repro.fl.client.make_round_core``) runs the local updates, the Eq. 10
+sigma estimates, the deltas and their L2 norms, and the host pulls all
+scheduling inputs in a single device->host sync (``last_round_host_syncs``
+counts the pulls; the fault-free round makes 2, down from O(V) in the
+per-device-loop implementation).  ``run_round`` is decomposed into
+reusable phases (``_prepare_round`` / ``_post_core`` / ``_make_problem``
+/ ``_upload_phase`` / ``_backfill_problem`` / ``_apply_backfill`` /
+``_finalize_round``) so ``repro.fl.multicell.MultiCellTrainer`` can drive
+C cells through the same round core with one batched ``solve_many``
+scheduling dispatch per round.
+
 The trainer is model-agnostic (CNNs for the paper's experiments; any
 model-zoo architecture through the same interface).
 """
@@ -46,8 +58,8 @@ from repro.data.datasets import ArrayDataset
 from repro.faults.config import FaultConfig
 from repro.faults.injector import FAILURE_CAUSES, FaultInjector
 from repro.faults.sanitize import sanitize_updates
-from repro.fl.client import make_local_update, payload_bits, set_device
-from repro.fl.server import aggregate
+from repro.fl.client import (make_local_update, make_round_core,
+                             payload_bits, set_device, set_devices)
 from repro.models.registry import Model
 from repro.wireless.channel import CellState, make_cell
 
@@ -62,6 +74,12 @@ class FLConfig:
     deadline_s: float = 2.0
     scheduler: str = "fedcgd-fscd"
     scheduler_backend: str = "numpy"     # "numpy" | "jax" (batched engine)
+    scheduler_pallas: Optional[bool] = None  # None = auto (TPU only); the
+    #   jax backend then routes its f32 candidate scans through the
+    #   Pallas wemd_swap / wemd_add kernels (f64 stays the CPU default)
+    num_cells: int = 1                   # cells per aggregation step
+    #   (used by repro.fl.multicell.MultiCellTrainer; a plain
+    #   FederatedTrainer always simulates exactly one cell)
     poc_candidates: int = 16
     bits_per_param: int = 32
     payload_bits_override: float = 0.0   # 0 = derive from model size
@@ -75,6 +93,33 @@ class FLConfig:
 
 SCHEDULERS = ("fedcgd-fscd", "fedcgd-gs", "fedcgd-fscd-gc", "fedcgd-cd",
               "bc", "bn", "poc", "fcbs", "random")
+
+
+@dataclasses.dataclass
+class RoundPrep:
+    """Host-side round inputs (availability, channel, sampled batches)."""
+    avail: np.ndarray          # [V] bool
+    avail_idx: np.ndarray      # [V_av]
+    gains: np.ndarray          # [V] scheduling-time channel gains
+    bstar: np.ndarray          # [V] Eq. 9 minimum bandwidths
+    batches: object            # pytree, leaves [V_av, tau, b, ...]
+    p_sampled: np.ndarray      # [V_av, C] sampled label histograms
+    subkey: object             # per-round jax PRNG key
+
+
+@dataclasses.dataclass
+class UploadState:
+    """Mutable upload-phase outcome threaded through backfill/aggregate."""
+    upload: np.ndarray         # [V_av] bool — uploads entering Eq. 2
+    mod_deltas: Dict           # local idx -> replacement delta pytree
+    cause_counts: Dict[str, int]
+    arrived: np.ndarray        # [V_av] bool — pre-sanitize arrivals
+    rf: object                 # RoundFaults
+    upload_gains: np.ndarray   # [V] gains at upload time
+    num_dropped_nf: int = 0
+    num_clipped: int = 0
+    num_bf_scheduled: int = 0
+    num_backfilled: int = 0
 
 
 class FederatedTrainer:
@@ -113,7 +158,24 @@ class FederatedTrainer:
         self.g_refresh_errors = 0                    # cumulative Eq. 12 skips
 
         self._local_update = make_local_update(self._loss, cfg.eta, cfg.tau)
+        self._round_core = make_round_core(self._loss, self._sigma_one,
+                                           cfg.eta, cfg.tau)
+        self._sigma_all = jax.jit(jax.vmap(self._sigma_one,
+                                           in_axes=(None, 0)))
+        # fused finalize hot path: Eq. 2 weighted sum (the op order of
+        # ``server.aggregate``) and the Eq. 12 upload gather + rescale,
+        # one dispatch each instead of O(leaves) eager ops
+        self._agg_core = jax.jit(
+            lambda dev, w: jax.tree.map(
+                lambda leaf: (leaf.astype(jnp.float32)
+                              * w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+                              ).sum(0).astype(leaf.dtype), dev))
+        self._grads_core = jax.jit(
+            lambda deltas, idx: jax.tree.map(
+                lambda x: -x[idx] / (cfg.tau * cfg.eta), deltas))
         self._eval_batch = jax.jit(self._eval_fn)
+        self.last_round_host_syncs = 0       # device->host pulls between
+        #   local update and aggregation (fused round contract: <= 3)
 
         # single-class-per-device detection (enables FSCD-Gc)
         self.device_class = self.p_dev.argmax(axis=1)
@@ -159,18 +221,19 @@ class FederatedTrainer:
         x = np.stack(xs).reshape((len(xs), cfg.tau, cfg.batch_size)
                                  + xs[0].shape[1:])
         y = np.stack(ys).reshape(len(ys), cfg.tau, cfg.batch_size)
-        batch = jax.tree.map(
-            lambda *leaves: jnp.stack(leaves),
-            *[self.make_batch(x[i], y[i]) for i in range(len(xs))])
-        return batch, np.stack(hists)
+        # one make_batch over the stacked [V_av, tau, b, ...] arrays: a
+        # single host->device transfer per leaf instead of O(V) eager
+        # per-device conversions + stacks (make_batch is leading-dim
+        # agnostic, so the values are unchanged)
+        return self.make_batch(x, y), np.stack(hists)
 
     def _estimate_sigmas(self, avail_idx, batches):
-        """Eq. 10 via the last-layer decomposition on the first batch."""
-        sig = []
-        for i, v in enumerate(avail_idx):
-            b0 = jax.tree.map(lambda x: x[i, 0], batches)
-            sig.append(self._sigma_one(self.params, b0))
-        return np.array([float(s) for s in sig])
+        """Eq. 10 via the last-layer decomposition on the first batch —
+        all V devices in one vmapped jit call + one host pull (the fused
+        round core computes the same quantity inline)."""
+        first = jax.tree.map(lambda x: x[:, 0], batches)
+        return np.asarray(self._sigma_all(self.params, first),
+                          dtype=np.float64)
 
     def _sigma_one(self, params, batch):
         if isinstance(self.model.cfg, CNNConfig):
@@ -194,11 +257,13 @@ class FederatedTrainer:
             raise ValueError(f"unknown scheduler_backend: {backend!r}")
         if name == "fedcgd-gs":
             if backend == "jax":
-                return S.solve_many([prob], "gs", backend="jax")[0]
+                return S.solve_many([prob], "gs", backend="jax",
+                                    pallas=cfg.scheduler_pallas)[0]
             return S.greedy_scheduling(prob)
         if name in ("fedcgd-fscd", "fedcgd-fscd-gc"):
             if backend == "jax":
-                return S.solve_many([prob], "fscd", backend="jax")[0]
+                return S.solve_many([prob], "fscd", backend="jax",
+                                    pallas=cfg.scheduler_pallas)[0]
             return S.fscd(prob)
         if name == "fedcgd-cd":
             return S.coordinate_descent(prob, self.rng)
@@ -230,43 +295,58 @@ class FederatedTrainer:
                     self.faults.corrupt_mode_of(rf, v))
         return out
 
-    def _backfill(self, prob, sched, arrived, rf, avail_idx, bstar,
-                  upload_gains, deltas, delta_norms, j):
-        """One-shot reschedule after upload failures: re-solve P1 over
-        the surviving feasible devices (available, unscheduled, not
+    def _backfill_problem(self, prob, sched, st: UploadState,
+                          prep: RoundPrep) -> Optional[S.Problem]:
+        """One-shot reschedule after upload failures: the P1 instance
+        over the surviving feasible devices (available, unscheduled, not
         dropped out) under the residual bandwidth, at upload-time gains.
-
-        Backfilled uploads are treated as freshly channel-measured (no
-        second outage draw) but still face corruption + sanitization.
-        Returns (kept_indices, (num_scheduled, dropped_nf, clipped,
-        replacement_deltas))."""
+        Returns None when no residual bandwidth / no feasible device."""
         cfg = self.cfg
+        avail_idx = prep.avail_idx
         residual = self.cell.params.total_bandwidth_hz \
-            - float(bstar[avail_idx[arrived]].sum())
+            - float(prep.bstar[avail_idx[st.arrived]].sum())
         if residual <= 0:
-            return [], (0, 0, 0, {})
+            return None
         bf_bw = min_bandwidth(
             self.payload, cfg.deadline_s,
-            self.cell.received_power(upload_gains),
+            self.cell.received_power(st.upload_gains),
             self.cell.params.noise_psd_w)[avail_idx]
-        blocked = sched.mask | rf.dropout[avail_idx]
+        blocked = sched.mask | st.rf.dropout[avail_idx]
         bf_bw = np.where(blocked, -1.0, bf_bw)
         if not ((bf_bw > 0) & (bf_bw <= residual)).any():
-            return [], (0, 0, 0, {})
-        prob_bf = dataclasses.replace(prob, min_bw=bf_bw, total_bw=residual)
-        bf = self._schedule(prob_bf, avail_idx, upload_gains, delta_norms, j)
+            return None
+        return dataclasses.replace(prob, min_bw=bf_bw, total_bw=residual)
+
+    def _apply_backfill(self, bf: S.Schedule, st: UploadState,
+                        prep: RoundPrep, deltas, delta_norms) -> None:
+        """Fold a solved backfill schedule into the upload state.
+
+        Backfilled uploads are treated as freshly channel-measured (no
+        second outage draw) but still face corruption + sanitization."""
         if not bf.mask.any():
-            return [], (0, 0, 0, {})
+            return
+        avail_idx = prep.avail_idx
         self.plays[avail_idx[bf.mask]] += 1
-        overrides = self._corrupt_overrides(rf, bf.mask, avail_idx, deltas)
+        overrides = self._corrupt_overrides(st.rf, bf.mask, avail_idx,
+                                            deltas)
         san = sanitize_updates(deltas, np.flatnonzero(bf.mask), overrides,
-                               cfg.faults.clip_delta_norm, norms=delta_norms)
-        return san.kept, (int(bf.num_scheduled),
-                          len(san.dropped_nonfinite), len(san.clipped),
-                          san.deltas)
+                               self.cfg.faults.clip_delta_norm,
+                               norms=delta_norms)
+        self.last_round_host_syncs += 1
+        st.cause_counts["corrupt"] += len(san.dropped_nonfinite)
+        st.num_bf_scheduled += int(bf.num_scheduled)
+        st.num_dropped_nf += len(san.dropped_nonfinite)
+        st.num_clipped += len(san.clipped)
+        st.num_backfilled += len(san.kept)
+        st.mod_deltas.update(san.deltas)
+        st.upload[san.kept] = True
 
     # ------------------------------------------------------------------
-    def run_round(self, j: int) -> Dict:
+    # round phases (shared with repro.fl.multicell.MultiCellTrainer)
+
+    def _prepare_round(self, j: int) -> RoundPrep:
+        """Host-side round inputs: availability, channel, Eq. 9
+        bandwidths, sampled batches, per-round PRNG key."""
         cfg = self.cfg
         avail = self.rng.random(cfg.num_devices) < cfg.available_prob
         if not avail.any():
@@ -280,40 +360,44 @@ class FederatedTrainer:
 
         batches, p_sampled = self._device_batches(avail)
         self.jkey, sub = jax.random.split(self.jkey)
-        dev_params, dev_losses = self._local_update(self.params, batches, sub)
-        dev_losses = np.asarray(dev_losses)
-        self.cum_loss[avail_idx] = 0.9 * self.cum_loss[avail_idx] + dev_losses
+        return RoundPrep(avail=avail, avail_idx=avail_idx, gains=gains,
+                         bstar=bstar, batches=batches,
+                         p_sampled=p_sampled, subkey=sub)
 
-        sigma_v = self._estimate_sigmas(avail_idx, batches)
-        alpha_av = np.ones(len(avail_idx)) / len(avail_idx)
+    def _post_core(self, prep: RoundPrep, dev_losses: np.ndarray,
+                   sigma_v: np.ndarray) -> None:
+        """Fold the round core's host pulls into the running estimates
+        (POC loss statistics, Eq. 11 global sigma)."""
+        self.cum_loss[prep.avail_idx] = (0.9 * self.cum_loss[prep.avail_idx]
+                                         + dev_losses)
+        alpha_av = np.ones(len(prep.avail_idx)) / len(prep.avail_idx)
         self.sigma_hat = E.sigma_hat_global(sigma_v, alpha_av)
 
-        deltas = jax.tree.map(lambda new, old: new - old[None],
-                              dev_params, self.params)
-        delta_norms = np.array([
-            float(E.tree_norm(jax.tree.map(lambda x: x[i], deltas)))
-            for i in range(len(avail_idx))])
-
+    def _make_problem(self, prep: RoundPrep) -> S.Problem:
+        cfg = self.cfg
         cw = (self.g_hat_c if cfg.scheduler == "fedcgd-fscd-gc"
               else np.full(self.num_classes, self.g_hat))
-        prob = S.Problem(
-            p_dev=p_sampled, global_dist=self.global_dist,
+        return S.Problem(
+            p_dev=prep.p_sampled, global_dist=self.global_dist,
             class_weights=cw, sigma=self.sigma_hat,
-            batch_size=cfg.batch_size, min_bw=bstar[avail_idx],
+            batch_size=cfg.batch_size, min_bw=prep.bstar[prep.avail_idx],
             total_bw=self.cell.params.total_bandwidth_hz)
-        sched = self._schedule(prob, avail_idx, gains, delta_norms, j)
 
+    def _upload_phase(self, j: int, prep: RoundPrep, sched: S.Schedule,
+                      deltas, delta_norms) -> UploadState:
+        """Fault injection + server-side sanitization for one round's
+        scheduled uploads (backfill is the caller's second pass)."""
+        cfg = self.cfg
+        avail_idx = prep.avail_idx
         mask_global = np.zeros(cfg.num_devices, bool)
         mask_global[avail_idx[sched.mask]] = True
         self.plays[mask_global] += 1
 
-        # ---- upload phase: fault injection + server defenses ----------
-        fcfg = cfg.faults
         inj = self.faults
         rf = inj.draw(j)
-        upload_gains = inj.upload_gains(gains, rf)
+        upload_gains = inj.upload_gains(prep.gains, rf)
         cause = inj.arrival_failures(
-            rf, mask_global, bstar, self.payload, cfg.deadline_s,
+            rf, mask_global, prep.bstar, self.payload, cfg.deadline_s,
             self.cell.received_power(upload_gains),
             self.cell.params.noise_psd_w)
         cause_counts = {c: 0 for c in FAILURE_CAUSES}
@@ -327,71 +411,83 @@ class FederatedTrainer:
         # sanitize arrived uploads (NaN/Inf guard + norm clip)
         overrides = self._corrupt_overrides(rf, arrived, avail_idx, deltas)
         san = sanitize_updates(deltas, np.flatnonzero(arrived), overrides,
-                               fcfg.clip_delta_norm, norms=delta_norms)
+                               cfg.faults.clip_delta_norm,
+                               norms=delta_norms)
+        if arrived.any():
+            self.last_round_host_syncs += 1
         cause_counts["corrupt"] += len(san.dropped_nonfinite)
-        num_dropped_nf = len(san.dropped_nonfinite)
-        num_clipped = len(san.clipped)
-        mod_deltas = san.deltas
         upload = np.zeros_like(sched.mask)
         upload[san.kept] = True
+        return UploadState(
+            upload=upload, mod_deltas=san.deltas,
+            cause_counts=cause_counts, arrived=arrived, rf=rf,
+            upload_gains=upload_gains,
+            num_dropped_nf=len(san.dropped_nonfinite),
+            num_clipped=len(san.clipped))
 
-        # one-shot backfill: re-solve P1 over the surviving feasible
-        # devices with the residual bandwidth budget
-        num_bf_scheduled = num_backfilled = 0
-        if (inj.enabled and fcfg.backfill
-                and int(upload.sum()) < sched.num_scheduled):
-            bf_kept, bf_stats = self._backfill(
-                prob, sched, arrived, rf, avail_idx, bstar, upload_gains,
-                deltas, delta_norms, j)
-            num_bf_scheduled, bf_dropped_nf, bf_clipped, bf_deltas = bf_stats
-            cause_counts["corrupt"] += bf_dropped_nf
-            num_dropped_nf += bf_dropped_nf
-            num_clipped += bf_clipped
-            num_backfilled = len(bf_kept)
-            mod_deltas.update(bf_deltas)
-            upload[bf_kept] = True
+    def _wants_backfill(self, st: UploadState, sched: S.Schedule) -> bool:
+        return (self.faults.enabled and self.cfg.faults.backfill
+                and int(st.upload.sum()) < sched.num_scheduled)
 
+    def _finalize_round(self, j: int, prep: RoundPrep, sched: S.Schedule,
+                        st: UploadState, dev_params, deltas,
+                        dev_losses: np.ndarray) -> Dict:
+        """Eq. 2 aggregation over the uploads that landed, Eq. 12 G
+        refresh, zero-upload degradation, and the round record."""
+        cfg = self.cfg
+        avail_idx = prep.avail_idx
+        upload, mod_deltas = st.upload, st.mod_deltas
         g_errs = 0
         if upload.any():
-            dev_up = dev_params
-            for i, dlt in mod_deltas.items():
-                if upload[i]:       # clipped / corrupted-but-kept uploads
-                    dev_up = set_device(dev_up, i, jax.tree.map(
-                        lambda o, d: o + d, self.params, dlt))
-            self.params = aggregate(dev_up, upload)
-            # Eq. 12: refresh G from the deltas that actually landed
+            mod = {i: d for i, d in mod_deltas.items() if upload[i]}
+            if mod:       # clipped / corrupted-but-kept uploads: one
+                # batched scatter per leaf instead of a set_device loop
+                idx = np.fromiter(mod.keys(), dtype=np.int64)
+                repl = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *mod.values())
+                dev_up = set_devices(
+                    dev_params, idx,
+                    jax.tree.map(lambda p, d: p[None] + d,
+                                 self.params, repl))
+                deltas_eff = set_devices(deltas, idx, repl)
+            else:
+                dev_up, deltas_eff = dev_params, deltas
+            # Eq. 2 through the fused agg core (aggregate()'s op order:
+            # mask/|Pi| weights, f32 weighted sum per leaf, one dispatch)
+            w = np.asarray(upload, np.float64)
+            self.params = self._agg_core(
+                dev_up, jnp.asarray(w / max(w.sum(), 1.0), jnp.float32))
+            # Eq. 12: refresh G from the deltas that actually landed —
+            # gather + rescale fused into one dispatch, stacked [U] axis
             up = np.flatnonzero(upload)
-            dev_grads = [
-                jax.tree.map(lambda x: -x / (cfg.tau * cfg.eta),
-                             mod_deltas[i]) if i in mod_deltas else
-                jax.tree.map(lambda x, i=i: -x[i] / (cfg.tau * cfg.eta),
-                             deltas)
-                for i in up]
+            dev_grads = self._grads_core(deltas_eff, jnp.asarray(up))
             alphas = np.ones(len(up)) / len(up)
             try:
-                g = E.g_hat(dev_grads, alphas, p_sampled[up],
+                g = E.g_hat(dev_grads, alphas, prep.p_sampled[up],
                             self.global_dist)
                 if np.isfinite(g) and g > 0:
                     self.g_hat = g
                 if self.single_class:
                     self.g_hat_c = E.g_hat_per_class(
-                        dev_grads, alphas, self.device_class[avail_idx][up],
-                        p_sampled[up], self.global_dist, self.num_classes)
+                        dev_grads, alphas,
+                        self.device_class[avail_idx][up],
+                        prep.p_sampled[up], self.global_dist,
+                        self.num_classes)
             except (ValueError, FloatingPointError, ZeroDivisionError):
                 g_errs += 1
                 self.g_refresh_errors += 1
-        elif inj.enabled:
+        elif self.faults.enabled:
             # zero uploads landed: keep the previous params and decay the
             # estimates toward their priors instead of freezing them
-            d = fcfg.estimate_decay
+            d = cfg.faults.estimate_decay
             self.sigma_hat = d * self.sigma_hat + (1 - d) * cfg.sigma_init
             self.g_hat = d * self.g_hat + (1 - d) * cfg.g_init
             self.g_hat_c = d * self.g_hat_c + (1 - d) * cfg.g_init
 
-        num_attempted = sched.num_scheduled + num_bf_scheduled
+        num_attempted = sched.num_scheduled + st.num_bf_scheduled
         rec = {
             "round": j,
-            "num_available": int(avail.sum()),
+            "num_available": int(prep.avail.sum()),
             "num_scheduled": int(sched.num_scheduled),
             "wemd": float(sched.wemd),
             "sampling_variance": float(sched.sampling_variance),
@@ -402,17 +498,51 @@ class FederatedTrainer:
             # failure telemetry (the fault layer as observability layer)
             "num_uploaded": int(upload.sum()),
             "num_failed": int(num_attempted - upload.sum()),
-            "failure_causes": cause_counts,
-            "num_backfilled": int(num_backfilled),
-            "num_sanitized": int(num_dropped_nf + num_clipped),
-            "num_clipped": int(num_clipped),
-            "num_infeasible": int((bstar[avail_idx] < 0).sum()),
+            "failure_causes": st.cause_counts,
+            "num_backfilled": int(st.num_backfilled),
+            "num_sanitized": int(st.num_dropped_nf + st.num_clipped),
+            "num_clipped": int(st.num_clipped),
+            "num_infeasible": int((prep.bstar[avail_idx] < 0).sum()),
             "g_refresh_errors": int(g_errs),
         }
         if cfg.eval_every and (j % cfg.eval_every == 0):
             rec["test_accuracy"] = self.evaluate()
         self.history.append(rec)
         return rec
+
+    # ------------------------------------------------------------------
+    def run_round(self, j: int) -> Dict:
+        prep = self._prepare_round(j)
+        self.last_round_host_syncs = 0
+
+        # fused round core: local update + sigma + deltas + norms in one
+        # XLA program (cell axis of 1), one host sync for all of it
+        dev_params_c, losses_c, sigma_c, deltas_c, norms_c = \
+            self._round_core(
+                jax.tree.map(lambda x: x[None], self.params),
+                jax.tree.map(lambda x: x[None], prep.batches),
+                jnp.stack([prep.subkey]))
+        dev_losses, sigma_v, delta_norms = (
+            np.asarray(x[0], dtype=np.float64)
+            for x in jax.device_get((losses_c, sigma_c, norms_c)))
+        self.last_round_host_syncs += 1
+        dev_params = jax.tree.map(lambda x: x[0], dev_params_c)
+        deltas = jax.tree.map(lambda x: x[0], deltas_c)
+
+        self._post_core(prep, dev_losses, sigma_v)
+        prob = self._make_problem(prep)
+        sched = self._schedule(prob, prep.avail_idx, prep.gains,
+                               delta_norms, j)
+
+        st = self._upload_phase(j, prep, sched, deltas, delta_norms)
+        if self._wants_backfill(st, sched):
+            prob_bf = self._backfill_problem(prob, sched, st, prep)
+            if prob_bf is not None:
+                bf = self._schedule(prob_bf, prep.avail_idx,
+                                    st.upload_gains, delta_norms, j)
+                self._apply_backfill(bf, st, prep, deltas, delta_norms)
+        return self._finalize_round(j, prep, sched, st, dev_params,
+                                    deltas, dev_losses)
 
     # ------------------------------------------------------------------
     def evaluate(self, max_batches: int = 20, batch_size: int = 256) -> float:

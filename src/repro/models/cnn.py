@@ -55,13 +55,16 @@ def _dropout(x, rate, rng):
 
 def init_paper_cnn(key, cfg: CNNConfig):
     ks = jax.random.split(key, 8)
-    w = cfg.width
-    flat = (cfg.image_size // 4) ** 2 * 64 * w
+    # width may be fractional (benchmark-scale micro models): channel
+    # counts round to >= 1
+    c32 = max(1, int(round(32 * cfg.width)))
+    c64 = max(1, int(round(64 * cfg.width)))
+    flat = (cfg.image_size // 4) ** 2 * c64
     return {
-        "c1": _conv_init(ks[0], 3, 3, cfg.channels, 32 * w),
-        "c2": _conv_init(ks[1], 3, 3, 32 * w, 32 * w),
-        "c3": _conv_init(ks[2], 3, 3, 32 * w, 64 * w),
-        "c4": _conv_init(ks[3], 3, 3, 64 * w, 64 * w),
+        "c1": _conv_init(ks[0], 3, 3, cfg.channels, c32),
+        "c2": _conv_init(ks[1], 3, 3, c32, c32),
+        "c3": _conv_init(ks[2], 3, 3, c32, c64),
+        "c4": _conv_init(ks[3], 3, 3, c64, c64),
         "fc1": jax.random.normal(ks[4], (flat, 120)) * math.sqrt(2 / flat),
         "b1": jnp.zeros((120,)),
         "fc2": jax.random.normal(ks[5], (120, cfg.num_classes)) * 0.1,
