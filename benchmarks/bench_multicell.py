@@ -106,7 +106,8 @@ def run():
                "fresh_multicell_us": {}, "fresh_sequential_us": {},
                "fresh_speedup": {},
                "steady_multicell_us": {}, "steady_sequential_us": {},
-               "steady_speedup": {}, "rounds_per_sec": {}}
+               "steady_speedup": {}, "rounds_per_sec": {},
+               "host_syncs": {}}
 
     model, train, test, parts = _world(V)
     # global warmup: JAX backend init + the module-level jit caches that
@@ -148,10 +149,14 @@ def run():
         results["steady_sequential_us"][str(C)] = st_seq
         results["steady_speedup"][str(C)] = st_seq / st_mc
         results["rounds_per_sec"][str(C)] = 1e6 / st_mc
+        # device->host syncs of the last full C-cell round — the batched
+        # phase engine's contract is a constant count independent of C
+        results["host_syncs"][str(C)] = int(mc.last_round_host_syncs)
         yield row(f"multicell_fresh_C{C}", us_mc,
                   f"speedup={us_seq / us_mc:.2f}x")
         yield row(f"multicell_steady_C{C}", st_mc,
-                  f"speedup={st_seq / st_mc:.2f}x")
+                  f"speedup={st_seq / st_mc:.2f}x "
+                  f"host_syncs={mc.last_round_host_syncs}")
 
     # single-cell hot path: fused core vs the pre-fusion device loop
     import jax

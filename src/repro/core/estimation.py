@@ -18,7 +18,7 @@ uses that structure.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -124,12 +124,17 @@ def _grad_deviation_norms(device_grads, alphas) -> np.ndarray:
 
 
 def g_hat(device_grads, alphas, p_dev: np.ndarray,
-          global_dist: np.ndarray) -> float:
+          global_dist: np.ndarray,
+          norms: Optional[np.ndarray] = None) -> float:
     """Eq. 12: max_v ||grad_v - grad_global|| / ||p_v - p||_1.
 
     ``device_grads`` is a list of per-device pytrees or a stacked pytree
-    with a leading [U] device axis (the trainer's fused path)."""
-    norms = _grad_deviation_norms(device_grads, alphas)
+    with a leading [U] device axis (the trainer's fused path).  When the
+    [U] deviation norms were already computed device-side (the fused
+    finalize core), pass them as ``norms`` — no device round-trip is
+    made and ``device_grads``/``alphas`` may be None."""
+    if norms is None:
+        norms = _grad_deviation_norms(device_grads, alphas)
     l1 = np.abs(np.asarray(p_dev) - np.asarray(global_dist)).sum(axis=1)
     valid = l1 >= 1e-9
     if not valid.any():
@@ -139,11 +144,13 @@ def g_hat(device_grads, alphas, p_dev: np.ndarray,
 
 def g_hat_per_class(device_grads, alphas, device_class: np.ndarray,
                     p_dev: np.ndarray, global_dist: np.ndarray,
-                    num_classes: int) -> np.ndarray:
+                    num_classes: int,
+                    norms: Optional[np.ndarray] = None) -> np.ndarray:
     """Per-class G_c when each device holds a single class (the paper's
     FedCGD-FSCD-Gc variant): G_c = max_{v in Pi_c} ||grad_v - grad|| /
-    ||p_v - p||_1."""
-    norms = _grad_deviation_norms(device_grads, alphas)
+    ||p_v - p||_1.  ``norms`` as in ``g_hat``."""
+    if norms is None:
+        norms = _grad_deviation_norms(device_grads, alphas)
     l1 = np.abs(np.asarray(p_dev) - np.asarray(global_dist)).sum(axis=1)
     G = np.zeros(num_classes)
     for v in range(len(norms)):

@@ -15,6 +15,7 @@ arrive — the server-side sanitizer decides their fate.
 from __future__ import annotations
 
 import dataclasses
+from typing import List, Sequence
 
 import numpy as np
 
@@ -55,24 +56,78 @@ class FaultInjector:
     def enabled(self) -> bool:
         return self.cfg.injection_enabled
 
+    def _raw_draw(self, round_idx: int):
+        """One round's raw RNG arrays, in ``draw``'s exact consumption
+        order (uniforms for dropout/deadline/outage, the reshadow
+        normals, the corrupt uniforms and mode integers)."""
+        cfg = self.cfg
+        V = self.num_devices
+        rng = np.random.default_rng(
+            [0xFA017, self.base_seed, cfg.seed, round_idx])
+        u_drop = rng.random(V)
+        u_dead = rng.random(V)
+        u_out = rng.random(V)
+        reshadow = (rng.normal(0.0, cfg.reshadow_std_db, V)
+                    if cfg.reshadow_std_db > 0 else np.zeros(V))
+        u_cor = rng.random(V)
+        mode = rng.integers(0, len(cfg.corrupt_modes), V)
+        return u_drop, u_dead, u_out, reshadow, u_cor, mode
+
     # ------------------------------------------------------------------
     def draw(self, round_idx: int) -> RoundFaults:
         """Realise round ``round_idx``'s faults (all-clear when inert)."""
         if not self.enabled:
             return RoundFaults.none(self.num_devices)
         cfg = self.cfg
-        V = self.num_devices
-        rng = np.random.default_rng(
-            [0xFA017, self.base_seed, cfg.seed, round_idx])
+        u_drop, u_dead, u_out, reshadow, u_cor, mode = \
+            self._raw_draw(round_idx)
         return RoundFaults(
-            dropout=rng.random(V) < cfg.dropout_prob,
-            deadline_miss=rng.random(V) < cfg.deadline_miss_prob,
-            outage=rng.random(V) < cfg.outage_prob,
-            reshadow_db=(rng.normal(0.0, cfg.reshadow_std_db, V)
-                         if cfg.reshadow_std_db > 0 else np.zeros(V)),
-            corrupt=rng.random(V) < cfg.corrupt_prob,
-            corrupt_mode=rng.integers(0, len(cfg.corrupt_modes), V),
+            dropout=u_drop < cfg.dropout_prob,
+            deadline_miss=u_dead < cfg.deadline_miss_prob,
+            outage=u_out < cfg.outage_prob,
+            reshadow_db=reshadow,
+            corrupt=u_cor < cfg.corrupt_prob,
+            corrupt_mode=mode,
         )
+
+    @staticmethod
+    def draw_many(injectors: Sequence["FaultInjector"],
+                  round_idx: int) -> List[RoundFaults]:
+        """One round's faults for C injectors with O(1) vectorized
+        threshold passes over stacked [C, V] draws.
+
+        Each injector's raw uniforms/normals still come from its own
+        ``(seed, round)``-keyed generator in ``draw``'s order, so every
+        cell's realisation is bitwise-identical to a standalone
+        ``draw`` call; only the post-draw comparisons are batched.  The
+        all-inert case allocates one [C, V] zero block shared by every
+        cell instead of C sets of per-cell arrays."""
+        C = len(injectors)
+        V = injectors[0].num_devices
+        if not any(inj.enabled for inj in injectors):
+            zb = np.zeros((C, V), dtype=bool)
+            zf = np.zeros((C, V))
+            zi = np.zeros((C, V), dtype=np.int64)
+            return [RoundFaults(dropout=zb[c], deadline_miss=zb[c],
+                                outage=zb[c], reshadow_db=zf[c],
+                                corrupt=zb[c], corrupt_mode=zi[c])
+                    for c in range(C)]
+        raws = [inj._raw_draw(round_idx) if inj.enabled
+                else (np.ones(V), np.ones(V), np.ones(V), np.zeros(V),
+                      np.ones(V), np.zeros(V, dtype=np.int64))
+                for inj in injectors]
+        u = [np.stack(cols) for cols in zip(*raws)]       # 6 x [C, V]
+        prob = np.array([[inj.cfg.dropout_prob, inj.cfg.deadline_miss_prob,
+                          inj.cfg.outage_prob, inj.cfg.corrupt_prob]
+                         for inj in injectors])           # [C, 4]
+        drop = u[0] < prob[:, 0:1]
+        dead = u[1] < prob[:, 1:2]
+        out = u[2] < prob[:, 2:3]
+        cor = u[4] < prob[:, 3:4]
+        return [RoundFaults(dropout=drop[c], deadline_miss=dead[c],
+                            outage=out[c], reshadow_db=u[3][c],
+                            corrupt=cor[c], corrupt_mode=u[5][c])
+                for c in range(C)]
 
     # ------------------------------------------------------------------
     def upload_gains(self, gains: np.ndarray, rf: RoundFaults) -> np.ndarray:

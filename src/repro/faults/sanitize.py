@@ -54,13 +54,16 @@ def tree_is_finite(tree) -> bool:
 
 def sanitize_updates(deltas, upload_idx: Sequence[int],
                      overrides: Dict[int, object], clip_norm: float,
-                     norms: Optional[np.ndarray] = None) -> SanitizeResult:
+                     norms: Optional[np.ndarray] = None,
+                     finite: Optional[np.ndarray] = None) -> SanitizeResult:
     """Screen the uploads in ``upload_idx``.
 
     ``deltas`` is the stacked [A, ...] delta pytree; ``overrides`` maps
     an index to a replacement (e.g. corrupted) delta that shadows the
     stacked row; ``norms`` optionally carries precomputed L2 norms for
-    the unmodified rows.
+    the unmodified rows.  ``finite`` optionally carries precomputed
+    per-row NaN/Inf-guard flags (the fused round core emits them), in
+    which case a clean round makes no device round-trip at all.
     """
     import jax
     upload_idx = [int(i) for i in upload_idx]
@@ -69,13 +72,13 @@ def sanitize_updates(deltas, upload_idx: Sequence[int],
     if not upload_idx:
         return res
     plain = [i for i in upload_idx if i not in overrides]
-    finite = {}
+    finite_map = {}
     if plain:
-        fin = finite_per_device(deltas)
-        finite.update({i: bool(fin[i]) for i in plain})
+        fin = finite if finite is not None else finite_per_device(deltas)
+        finite_map.update({i: bool(fin[i]) for i in plain})
     for i in upload_idx:
         delta = res.deltas.get(i)
-        ok = tree_is_finite(delta) if delta is not None else finite[i]
+        ok = tree_is_finite(delta) if delta is not None else finite_map[i]
         if not ok:
             res.dropped_nonfinite.append(i)
             res.deltas.pop(i, None)

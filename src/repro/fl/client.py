@@ -73,6 +73,9 @@ def make_round_core(loss_fn: Callable, sigma_fn: Callable, eta: float,
       sigma_v     [C, V]       Eq. 10 on each device's first batch
       deltas      [C, V, ...]  dev_params - params (the upload payload)
       delta_norms [C, V]       per-device L2 norms of the deltas
+      finite      [C, V] bool  every delta leaf is finite (the server's
+                               NaN/Inf guard, computed in-graph so the
+                               sanitizer needs no extra device round-trip)
 
     so the trainer makes exactly one host sync between local update and
     scheduling (down from O(V) per-device pulls).
@@ -111,7 +114,11 @@ def make_round_core(loss_fn: Callable, sigma_fn: Callable, eta: float,
         deltas = jax.tree.map(lambda new, old: new - old[None],
                               dev_params, params)
         delta_norms = jax.vmap(tree_norm)(deltas)
-        return dev_params, losses, sigma_v, deltas, delta_norms
+        finite = None
+        for x in jax.tree.leaves(deltas):
+            f = jnp.isfinite(x).reshape(x.shape[0], -1).all(axis=1)
+            finite = f if finite is None else finite & f
+        return dev_params, losses, sigma_v, deltas, delta_norms, finite
 
     if cell_axis == "auto":
         cell_axis = "scan" if jax.default_backend() == "cpu" else "vmap"

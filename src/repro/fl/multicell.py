@@ -3,25 +3,48 @@
 The paper evaluates P1 per cell per round; a deployment runs many cells
 concurrently (one edge server each).  ``MultiCellTrainer`` simulates C
 independent ``FederatedTrainer`` cells — separate seeds, channel
-geometries, model replicas, fault streams — but drives every round
-through
+geometries, model replicas, fault streams — but every round phase is
+*batched across cells*, so a C-cell round costs a **constant number of
+host syncs and device dispatches independent of C**:
 
-  * ONE vmapped local-update program: the fused round core from
-    ``repro.fl.client.make_round_core`` with leading axes
+  * prep: availability / channel / fault draws still come from each
+    cell's own RNG stream (bitwise-identical to standalone cells), but
+    the channel math (path loss, shadow fold, Eq. 9 bandwidths) runs
+    once over stacked [C, V] arrays
+    (``repro.wireless.channel.draw_gains_batch``,
+    ``repro.faults.FaultInjector.draw_many``);
+  * local update: ONE fused round-core dispatch
+    (``repro.fl.client.make_round_core``) with leading axes
     [cell, device, tau] computes all cells' local SGD, Eq. 10 sigmas,
-    deltas and delta norms in a single XLA dispatch + one host sync;
-  * ONE ``solve_many`` scheduling dispatch: the C per-cell P1 instances
-    are padded to a common device count and solved as a single batch by
-    the PR 6 engine (jax backend; the f32 Pallas wemd kernels route in
-    on TPU backends via ``FLConfig.scheduler_pallas``).
+    deltas, delta norms and NaN/Inf-guard flags, pulled in a single
+    device->host sync; model params stay stacked [C, ...] across rounds
+    so nothing is re-stacked per round;
+  * scheduling: ONE batched ``solve_many`` dispatch over the C per-cell
+    P1 instances, padded to a common device count through a cached pad
+    layout (no per-round float64 rebuilds);
+  * finalize: ONE fused dispatch (``repro.fl.server.make_finalize_core``)
+    runs every cell's Eq. 2 aggregation and Eq. 12 deviation norms with
+    the upload masks as a [C, V] weight matrix; zero-upload cells keep
+    their previous params through an in-graph select, and one host pull
+    of the [C, V] norms feeds all cells' sigma-hat / G-hat refreshes.
+
+Host-sync contract: a fault-free round makes exactly 2 device->host
+syncs for the WHOLE C-cell round (core outputs + finalize norms),
+counted by ``last_round_host_syncs`` on the trainer (contract <= 3,
+independent of C; per-cell counters only tick on fault-path work such
+as corrupt-delta screening or backfill sanitization, and evaluation
+pulls on ``eval_every`` rounds are not counted).
 
 Cells are *padded, not truncated*: a cell with fewer available devices
-than the round's max repeats its first device's batch (sliced off after
+than the round's max repeats its first device's batch (ignored after
 the core) and pads its P1 instance with zero-distribution, infeasible
 (``min_bw = -1``) device rows the solver can never schedule.  With
 ``num_cells = 1`` nothing is padded and every dispatch is the same
 program ``FederatedTrainer`` runs, so the single-cell history is
-reproduced bitwise (asserted in tests for both scheduler backends).
+reproduced bitwise (asserted in tests for both scheduler backends);
+with full availability every cell of a C>1 run matches a standalone
+trainer bitwise (the cell axes roll via ``lax.map`` on CPU, so the
+compiled bodies ARE the single-cell programs).
 
 Faulty rounds may issue one extra batched ``solve_many`` for the cells
 that back-fill failed uploads; fault-free rounds make exactly one
@@ -37,9 +60,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scheduling as S
+from repro.core.bandwidth import min_bandwidth
 from repro.data.datasets import ArrayDataset
+from repro.faults.injector import FaultInjector
 from repro.fl.rounds import FederatedTrainer, FLConfig
 from repro.models.registry import Model
+from repro.wireless.channel import draw_gains_batch, received_power_batch
 
 # schedulers with a batched solve_many implementation
 MULTICELL_SCHEDULERS = ("fedcgd-fscd", "fedcgd-gs", "fedcgd-fscd-gc")
@@ -57,26 +83,47 @@ def _pad_batches(batches, pad: int):
         batches)
 
 
+class _PadCache:
+    """Cached ``solve_many`` pad layout.
+
+    P1 instances are padded to a common device count with
+    zero-distribution, infeasible (``min_bw = -1``) rows: the solvers
+    can never schedule them, and real-device decisions are unchanged
+    (candidate values are computed per device; infeasible rows rank as
+    +inf).  The pad layout only depends on (batch slot, vmax, classes),
+    so instead of rebuilding fresh float64 arrays every round the
+    buffers are kept across calls and only rewritten in place."""
+
+    def __init__(self):
+        self._bufs = {}
+
+    def pad(self, probs: Sequence[S.Problem]) -> List[S.Problem]:
+        vmax = max(p.num_devices for p in probs)
+        out = []
+        for slot, p in enumerate(probs):
+            V = p.num_devices
+            if V == vmax:
+                out.append(p)
+                continue
+            p_dev = np.asarray(p.p_dev)
+            key = (slot, vmax, p_dev.shape[1])
+            bufs = self._bufs.get(key)
+            if bufs is None:
+                bufs = (np.zeros((vmax, p_dev.shape[1])),
+                        np.full(vmax, -1.0))
+                self._bufs[key] = bufs
+            pb, bb = bufs
+            pb[:V] = p_dev
+            pb[V:] = 0.0
+            bb[:V] = np.asarray(p.min_bw, np.float64)
+            bb[V:] = -1.0
+            out.append(dataclasses.replace(p, p_dev=pb, min_bw=bb))
+        return out
+
+
 def _pad_problems(probs: Sequence[S.Problem]) -> List[S.Problem]:
-    """Pad P1 instances to a common device count with zero-distribution,
-    infeasible rows (min_bw = -1): the solvers can never schedule them,
-    and real-device decisions are unchanged (candidate values are
-    computed per device; infeasible rows rank as +inf)."""
-    vmax = max(p.num_devices for p in probs)
-    out = []
-    for p in probs:
-        pad = vmax - p.num_devices
-        if pad == 0:
-            out.append(p)
-            continue
-        out.append(dataclasses.replace(
-            p,
-            p_dev=np.concatenate(
-                [np.asarray(p.p_dev),
-                 np.zeros((pad, np.asarray(p.p_dev).shape[1]))]),
-            min_bw=np.concatenate(
-                [np.asarray(p.min_bw, np.float64), np.full(pad, -1.0)])))
-    return out
+    """One-shot padding (uncached) — see ``_PadCache``."""
+    return _PadCache().pad(probs)
 
 
 def _slice_schedule(sched: S.Schedule, n: int) -> S.Schedule:
@@ -88,8 +135,9 @@ def _slice_schedule(sched: S.Schedule, n: int) -> S.Schedule:
 
 
 class MultiCellTrainer:
-    """C FederatedTrainer cells advanced in lock-step, one fused XLA
-    round core + one batched scheduling dispatch per aggregation step."""
+    """C FederatedTrainer cells advanced in lock-step: one fused XLA
+    round core, one batched scheduling dispatch and one fused finalize
+    per aggregation step — host syncs constant in C."""
 
     def __init__(self, model: Model, train: ArrayDataset,
                  test: ArrayDataset, device_indices, cfg: FLConfig,
@@ -118,25 +166,27 @@ class MultiCellTrainer:
                              dataclasses.replace(cfg, seed=cell_seeds[c]))
             for c in range(C)]
         # every cell runs the same architecture: share cell 0's compiled
-        # round core so C=1 executes the exact program FederatedTrainer
-        # runs (bitwise parity) and C>1 reuses one compilation; the
-        # per-trainer jitted finalize helpers are shared for the same
-        # reason (C standalone trainers would compile C identical copies)
+        # round core + finalize core so C=1 executes the exact programs
+        # FederatedTrainer runs (bitwise parity) and C>1 reuses one
+        # compilation (C standalone trainers would compile C copies)
         self._core = self.cells[0]._round_core
         for cell in self.cells[1:]:
             cell._round_core = self.cells[0]._round_core
             cell._sigma_all = self.cells[0]._sigma_all
-            cell._agg_core = self.cells[0]._agg_core
-            cell._grads_core = self.cells[0]._grads_core
-        # one dispatch returning every cell's slice of the stacked core
-        # outputs (vs. an eager per-cell-per-leaf slice loop): the rows
-        # are NOT trimmed to the cell's device count — padded rows carry
-        # zero aggregation weight and are never indexed by the upload /
-        # backfill phases, and at C=1 nothing is padded to begin with
-        self._unstack = jax.jit(lambda t: tuple(
+            cell._finalize_core = self.cells[0]._finalize_core
+        self._finalize_core = self.cells[0]._finalize_core
+        # params stay stacked [C, ...] across rounds (the round core and
+        # finalize consume/produce the stack directly); cells get their
+        # slices back through one jitted dispatch per round
+        self._params_c = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                      *[cell.params for cell in self.cells])
+        self._unstack_params = jax.jit(lambda t: tuple(
             jax.tree.map(lambda x, c=c: x[c], t) for c in range(C)))
+        self._pad_cache = _PadCache()
         self._algorithm = "gs" if cfg.scheduler == "fedcgd-gs" else "fscd"
         self.solve_many_calls = 0        # scheduling dispatches issued
+        self.last_round_host_syncs = 0   # device->host pulls for the
+        #   WHOLE C-cell round (contract: <= 3 fault-free, const in C)
         self.history: List[List[Dict]] = []
 
     @property
@@ -147,55 +197,99 @@ class MultiCellTrainer:
     def _solve_batch(self, probs: Sequence[S.Problem]) -> List[S.Schedule]:
         cfg = self.cfg
         self.solve_many_calls += 1
-        return S.solve_many(_pad_problems(probs), self._algorithm,
+        return S.solve_many(self._pad_cache.pad(probs), self._algorithm,
                             backend=cfg.scheduler_backend,
                             pallas=cfg.scheduler_pallas)
 
+    def _apply_mods_batched(self, dev_params_c, deltas_c, states):
+        """Scatter every cell's sanitizer replacements (clipped /
+        corrupted-but-kept uploads) into the stacked [C, V, ...] trees —
+        one (cell, device) scatter per leaf; no-op on clean rounds."""
+        mods = [(c, i, d) for c, st in enumerate(states)
+                for i, d in st.mod_deltas.items() if st.upload[i]]
+        if not mods:
+            return dev_params_c, deltas_c
+        cs = jnp.asarray([m[0] for m in mods])
+        vs = jnp.asarray([m[1] for m in mods])
+        repl = jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[m[2] for m in mods])
+        deltas_c = jax.tree.map(
+            lambda s, x: s.at[cs, vs].set(x.astype(s.dtype)),
+            deltas_c, repl)
+        dev_params_c = jax.tree.map(
+            lambda s, p, x: s.at[cs, vs].set((p[cs] + x).astype(s.dtype)),
+            dev_params_c, self._params_c, repl)
+        return dev_params_c, deltas_c
+
     def run_round(self, j: int) -> List[Dict]:
         cells = self.cells
-
-        # host-side prep per cell (availability, channel, batches) — the
-        # per-cell numpy RNG streams stay identical to standalone cells
-        preps = [cell._prepare_round(j) for cell in cells]
-        n_av = [len(p.avail_idx) for p in preps]
-        vmax = max(n_av)
+        C = len(cells)
+        cfg = self.cfg
+        self.last_round_host_syncs = 0
         for cell in cells:
             cell.last_round_host_syncs = 0
 
+        # host-side prep: availability / channel / batch draws stay on
+        # each cell's own RNG stream (bitwise-identical to standalone
+        # cells), the channel math runs once over [C, V] stacks
+        avails = [cell._draw_avail() for cell in cells]
+        cell_states = [cell.cell for cell in cells]
+        gains_cv = draw_gains_batch(cell_states,
+                                    [cell.rng for cell in cells])
+        rx_cv = received_power_batch(cell_states, gains_cv)
+        noise = np.array([cs.params.noise_psd_w
+                          for cs in cell_states])[:, None]
+        bstar_cv = min_bandwidth(cells[0].payload, cfg.deadline_s,
+                                 rx_cv, noise)
+        preps = [cell._prep_from_channel(j, av, ai, gains_cv[c],
+                                         bstar_cv[c])
+                 for c, (cell, (av, ai)) in enumerate(zip(cells, avails))]
+        n_av = [len(p.avail_idx) for p in preps]
+        vmax = max(n_av)
+
         # ONE fused core dispatch: [C, Vmax, ...] local update + sigma +
-        # deltas + norms, then one host pull for every scheduling input
-        params_c = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                *[cell.params for cell in cells])
+        # deltas + norms + finite flags, then one host pull for every
+        # scheduling input (params are already stacked — no per-round
+        # re-stack)
         batches_c = jax.tree.map(
             lambda *xs: jnp.stack(xs),
             *[_pad_batches(p.batches, vmax - n) for p, n in zip(preps,
                                                                 n_av)])
         keys_c = jnp.stack([p.subkey for p in preps])
-        dev_params_c, losses_c, sigma_c, deltas_c, norms_c = \
-            self._core(params_c, batches_c, keys_c)
-        lh, sh, nh = jax.device_get((losses_c, sigma_c, norms_c))
+        dev_params_c, losses_c, sigma_c, deltas_c, norms_c, fin_c = \
+            self._core(self._params_c, batches_c, keys_c)
+        lh, sh, nh, fh = jax.device_get((losses_c, sigma_c, norms_c,
+                                         fin_c))
+        self.last_round_host_syncs += 1
 
-        unstacked = self._unstack((dev_params_c, deltas_c))
-        probs, per_cell = [], []
+        probs, losses64, norms64 = [], [], []
         for c, (cell, prep, n) in enumerate(zip(cells, preps, n_av)):
-            cell.last_round_host_syncs += 1
             dev_losses = np.asarray(lh[c, :n], dtype=np.float64)
-            sigma_v = np.asarray(sh[c, :n], dtype=np.float64)
-            delta_norms = np.asarray(nh[c, :n], dtype=np.float64)
-            dev_params, deltas = unstacked[c]
-            cell._post_core(prep, dev_losses, sigma_v)
+            losses64.append(dev_losses)
+            norms64.append(np.asarray(nh[c, :n], dtype=np.float64))
+            cell._post_core(prep, dev_losses,
+                            np.asarray(sh[c, :n], dtype=np.float64))
             probs.append(cell._make_problem(prep))
-            per_cell.append((dev_losses, delta_norms, dev_params, deltas))
 
-        # ONE scheduling dispatch for all C cells
+        # ONE scheduling dispatch for all C cells (cached pad layout)
         scheds = [_slice_schedule(s, n)
                   for s, n in zip(self._solve_batch(probs), n_av)]
 
-        # upload phase per cell; collect the cells that want a backfill
+        # upload phase per cell: fault draws batched, NaN/Inf flags come
+        # from the core (no sanitizer round-trips), per-cell delta
+        # slices only materialized for fault-bearing configs
+        rfs = FaultInjector.draw_many([cell.faults for cell in cells], j)
+        need_deltas = (any(cell.faults.enabled for cell in cells)
+                       or cfg.faults.clip_delta_norm > 0)
+        deltas_cell = [None] * C
+        if need_deltas:
+            deltas_cell = [jax.tree.map(lambda x, c=c: x[c], deltas_c)
+                           for c in range(C)]
         states, bf_idx, bf_probs = [], [], []
         for c, (cell, prep, sched) in enumerate(zip(cells, preps, scheds)):
-            _, delta_norms, _, deltas = per_cell[c]
-            st = cell._upload_phase(j, prep, sched, deltas, delta_norms)
+            st = cell._upload_phase(j, prep, sched, deltas_cell[c],
+                                    norms64[c], finite=fh[c, :n_av[c]],
+                                    rf=rfs[c])
             states.append(st)
             if cell._wants_backfill(st, sched):
                 pb = cell._backfill_problem(probs[c], sched, st, prep)
@@ -206,23 +300,40 @@ class MultiCellTrainer:
         # at most one extra batched dispatch for the backfilling cells
         if bf_probs:
             for c, bf in zip(bf_idx, self._solve_batch(bf_probs)):
-                _, delta_norms, _, deltas = per_cell[c]
                 cells[c]._apply_backfill(
                     _slice_schedule(bf, n_av[c]), states[c], preps[c],
-                    deltas, delta_norms)
+                    deltas_cell[c], norms64[c], finite=fh[c, :n_av[c]])
+
+        # ONE fused finalize dispatch: Eq. 2 over the [C, V] upload
+        # weight matrix + Eq. 12 deviation norms; zero-upload cells keep
+        # their previous params through the in-graph select
+        w_cv = np.zeros((C, vmax), np.float32)
+        active = np.zeros(C, bool)
+        for c, (cell, st) in enumerate(zip(cells, states)):
+            pad = vmax - n_av[c]
+            if pad:     # padded rows enter Eq. 2 with weight 0 and are
+                # never G-refreshed
+                st.upload = np.concatenate(
+                    [st.upload, np.zeros(pad, bool)])
+            w_cv[c] = cell._finalize_weights(st.upload)
+            active[c] = st.upload.any()
+        dev_params_c, deltas_c = self._apply_mods_batched(
+            dev_params_c, deltas_c, states)
+        newp_c, norms_fc = self._finalize_core(
+            self._params_c, dev_params_c, deltas_c, w_cv, active)
+        self._params_c = newp_c
+        cell_params = self._unstack_params(newp_c)
+        norms_h = jax.device_get(norms_fc)
+        self.last_round_host_syncs += 1
 
         recs = []
         for c, (cell, prep, sched, st) in enumerate(
                 zip(cells, preps, scheds, states)):
-            dev_losses, _, dev_params, deltas = per_cell[c]
-            pad = vmax - n_av[c]
-            if pad:     # match the untrimmed [Vmax] trees: padded rows
-                # enter Eq. 2 with weight 0 and are never G-refreshed
-                st.upload = np.concatenate(
-                    [st.upload, np.zeros(pad, bool)])
-            recs.append(cell._finalize_round(j, prep, sched, st,
-                                             dev_params, deltas,
-                                             dev_losses))
+            cell.params = cell_params[c]
+            recs.append(cell._finalize_host(j, prep, sched, st,
+                                            norms_h[c], losses64[c]))
+        self.last_round_host_syncs += sum(
+            cell.last_round_host_syncs for cell in cells)
         self.history.append(recs)
         return recs
 

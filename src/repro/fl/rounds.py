@@ -60,6 +60,7 @@ from repro.faults.injector import FAILURE_CAUSES, FaultInjector
 from repro.faults.sanitize import sanitize_updates
 from repro.fl.client import (make_local_update, make_round_core,
                              payload_bits, set_device, set_devices)
+from repro.fl.server import make_finalize_core
 from repro.models.registry import Model
 from repro.wireless.channel import CellState, make_cell
 
@@ -163,16 +164,10 @@ class FederatedTrainer:
         self._sigma_all = jax.jit(jax.vmap(self._sigma_one,
                                            in_axes=(None, 0)))
         # fused finalize hot path: Eq. 2 weighted sum (the op order of
-        # ``server.aggregate``) and the Eq. 12 upload gather + rescale,
-        # one dispatch each instead of O(leaves) eager ops
-        self._agg_core = jax.jit(
-            lambda dev, w: jax.tree.map(
-                lambda leaf: (leaf.astype(jnp.float32)
-                              * w.reshape((-1,) + (1,) * (leaf.ndim - 1))
-                              ).sum(0).astype(leaf.dtype), dev))
-        self._grads_core = jax.jit(
-            lambda deltas, idx: jax.tree.map(
-                lambda x: -x[idx] / (cfg.tau * cfg.eta), deltas))
+        # ``server.aggregate``) + the Eq. 12 centered-gradient norms in
+        # ONE cell-batched dispatch (zero-upload cells keep their params
+        # through an in-graph select)
+        self._finalize_core = make_finalize_core(cfg.tau, cfg.eta)
         self._eval_batch = jax.jit(self._eval_fn)
         self.last_round_host_syncs = 0       # device->host pulls between
         #   local update and aggregation (fused round contract: <= 3)
@@ -318,7 +313,8 @@ class FederatedTrainer:
         return dataclasses.replace(prob, min_bw=bf_bw, total_bw=residual)
 
     def _apply_backfill(self, bf: S.Schedule, st: UploadState,
-                        prep: RoundPrep, deltas, delta_norms) -> None:
+                        prep: RoundPrep, deltas, delta_norms,
+                        finite=None) -> None:
         """Fold a solved backfill schedule into the upload state.
 
         Backfilled uploads are treated as freshly channel-measured (no
@@ -331,8 +327,9 @@ class FederatedTrainer:
                                             deltas)
         san = sanitize_updates(deltas, np.flatnonzero(bf.mask), overrides,
                                self.cfg.faults.clip_delta_norm,
-                               norms=delta_norms)
-        self.last_round_host_syncs += 1
+                               norms=delta_norms, finite=finite)
+        if finite is None or overrides:
+            self.last_round_host_syncs += 1
         st.cause_counts["corrupt"] += len(san.dropped_nonfinite)
         st.num_bf_scheduled += int(bf.num_scheduled)
         st.num_dropped_nf += len(san.dropped_nonfinite)
@@ -344,25 +341,37 @@ class FederatedTrainer:
     # ------------------------------------------------------------------
     # round phases (shared with repro.fl.multicell.MultiCellTrainer)
 
-    def _prepare_round(self, j: int) -> RoundPrep:
-        """Host-side round inputs: availability, channel, Eq. 9
-        bandwidths, sampled batches, per-round PRNG key."""
+    def _draw_avail(self):
+        """Device availability ~ Bernoulli(p_a), forced non-empty."""
         cfg = self.cfg
         avail = self.rng.random(cfg.num_devices) < cfg.available_prob
         if not avail.any():
             avail[self.rng.integers(cfg.num_devices)] = True
-        avail_idx = np.flatnonzero(avail)
+        return avail, np.flatnonzero(avail)
 
-        gains = self.cell.draw_gains(self.rng)
-        rx_power = self.cell.received_power(gains)
-        bstar = min_bandwidth(self.payload, cfg.deadline_s, rx_power,
-                              self.cell.params.noise_psd_w)
-
+    def _prep_from_channel(self, j: int, avail: np.ndarray,
+                           avail_idx: np.ndarray, gains: np.ndarray,
+                           bstar: np.ndarray) -> RoundPrep:
+        """Sampled batches + per-round PRNG key for a given availability
+        and channel realisation (the RNG tail of ``_prepare_round``;
+        split out so the multi-cell driver can batch the channel math
+        across cells between the two RNG passes)."""
         batches, p_sampled = self._device_batches(avail)
         self.jkey, sub = jax.random.split(self.jkey)
         return RoundPrep(avail=avail, avail_idx=avail_idx, gains=gains,
                          bstar=bstar, batches=batches,
                          p_sampled=p_sampled, subkey=sub)
+
+    def _prepare_round(self, j: int) -> RoundPrep:
+        """Host-side round inputs: availability, channel, Eq. 9
+        bandwidths, sampled batches, per-round PRNG key."""
+        cfg = self.cfg
+        avail, avail_idx = self._draw_avail()
+        gains = self.cell.draw_gains(self.rng)
+        rx_power = self.cell.received_power(gains)
+        bstar = min_bandwidth(self.payload, cfg.deadline_s, rx_power,
+                              self.cell.params.noise_psd_w)
+        return self._prep_from_channel(j, avail, avail_idx, gains, bstar)
 
     def _post_core(self, prep: RoundPrep, dev_losses: np.ndarray,
                    sigma_v: np.ndarray) -> None:
@@ -384,9 +393,15 @@ class FederatedTrainer:
             total_bw=self.cell.params.total_bandwidth_hz)
 
     def _upload_phase(self, j: int, prep: RoundPrep, sched: S.Schedule,
-                      deltas, delta_norms) -> UploadState:
+                      deltas, delta_norms, finite=None,
+                      rf=None) -> UploadState:
         """Fault injection + server-side sanitization for one round's
-        scheduled uploads (backfill is the caller's second pass)."""
+        scheduled uploads (backfill is the caller's second pass).
+
+        ``finite`` carries the round core's per-device NaN/Inf-guard
+        flags (no sanitizer device round-trip when provided); ``rf``
+        a pre-drawn fault realisation (the multi-cell driver draws all
+        cells in one batched pass)."""
         cfg = self.cfg
         avail_idx = prep.avail_idx
         mask_global = np.zeros(cfg.num_devices, bool)
@@ -394,7 +409,8 @@ class FederatedTrainer:
         self.plays[mask_global] += 1
 
         inj = self.faults
-        rf = inj.draw(j)
+        if rf is None:
+            rf = inj.draw(j)
         upload_gains = inj.upload_gains(prep.gains, rf)
         cause = inj.arrival_failures(
             rf, mask_global, prep.bstar, self.payload, cfg.deadline_s,
@@ -412,8 +428,8 @@ class FederatedTrainer:
         overrides = self._corrupt_overrides(rf, arrived, avail_idx, deltas)
         san = sanitize_updates(deltas, np.flatnonzero(arrived), overrides,
                                cfg.faults.clip_delta_norm,
-                               norms=delta_norms)
-        if arrived.any():
+                               norms=delta_norms, finite=finite)
+        if arrived.any() and (finite is None or overrides):
             self.last_round_host_syncs += 1
         cause_counts["corrupt"] += len(san.dropped_nonfinite)
         upload = np.zeros_like(sched.mask)
@@ -429,50 +445,52 @@ class FederatedTrainer:
         return (self.faults.enabled and self.cfg.faults.backfill
                 and int(st.upload.sum()) < sched.num_scheduled)
 
-    def _finalize_round(self, j: int, prep: RoundPrep, sched: S.Schedule,
-                        st: UploadState, dev_params, deltas,
-                        dev_losses: np.ndarray) -> Dict:
-        """Eq. 2 aggregation over the uploads that landed, Eq. 12 G
-        refresh, zero-upload degradation, and the round record."""
+    def _finalize_weights(self, upload: np.ndarray) -> np.ndarray:
+        """Eq. 2 weight row for the fused finalize core: upload_v / |U|
+        as f32.  The same values serve as the Eq. 12 centering alphas
+        (both are 1/|U| on uploaded rows, 0 elsewhere)."""
+        w = np.asarray(upload, np.float64)
+        return (w / max(w.sum(), 1.0)).astype(np.float32)
+
+    def _apply_mods(self, dev_params, deltas, st: UploadState):
+        """Scatter sanitizer replacements (clipped / corrupted-but-kept
+        uploads) into the stacked [V, ...] trees — one batched scatter
+        per leaf; no-op (bitwise) on clean rounds."""
+        mod = {i: d for i, d in st.mod_deltas.items() if st.upload[i]}
+        if not mod:
+            return dev_params, deltas
+        idx = np.fromiter(mod.keys(), dtype=np.int64)
+        repl = jax.tree.map(lambda *xs: jnp.stack(xs), *mod.values())
+        dev_up = set_devices(dev_params, idx,
+                             jax.tree.map(lambda p, d: p[None] + d,
+                                          self.params, repl))
+        return dev_up, set_devices(deltas, idx, repl)
+
+    def _finalize_host(self, j: int, prep: RoundPrep, sched: S.Schedule,
+                       st: UploadState, norms, dev_losses) -> Dict:
+        """Host half of finalize: Eq. 12 G refresh from the device-side
+        deviation norms (``norms``, [V] f32 — rows with no upload are
+        garbage and never read), zero-upload degradation, and the round
+        record.  The params update already happened in the fused
+        finalize core."""
         cfg = self.cfg
         avail_idx = prep.avail_idx
-        upload, mod_deltas = st.upload, st.mod_deltas
+        upload = st.upload
         g_errs = 0
         if upload.any():
-            mod = {i: d for i, d in mod_deltas.items() if upload[i]}
-            if mod:       # clipped / corrupted-but-kept uploads: one
-                # batched scatter per leaf instead of a set_device loop
-                idx = np.fromiter(mod.keys(), dtype=np.int64)
-                repl = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                    *mod.values())
-                dev_up = set_devices(
-                    dev_params, idx,
-                    jax.tree.map(lambda p, d: p[None] + d,
-                                 self.params, repl))
-                deltas_eff = set_devices(deltas, idx, repl)
-            else:
-                dev_up, deltas_eff = dev_params, deltas
-            # Eq. 2 through the fused agg core (aggregate()'s op order:
-            # mask/|Pi| weights, f32 weighted sum per leaf, one dispatch)
-            w = np.asarray(upload, np.float64)
-            self.params = self._agg_core(
-                dev_up, jnp.asarray(w / max(w.sum(), 1.0), jnp.float32))
-            # Eq. 12: refresh G from the deltas that actually landed —
-            # gather + rescale fused into one dispatch, stacked [U] axis
             up = np.flatnonzero(upload)
-            dev_grads = self._grads_core(deltas_eff, jnp.asarray(up))
             alphas = np.ones(len(up)) / len(up)
             try:
-                g = E.g_hat(dev_grads, alphas, prep.p_sampled[up],
-                            self.global_dist)
+                g = E.g_hat(None, alphas, prep.p_sampled[up],
+                            self.global_dist, norms=norms[up])
                 if np.isfinite(g) and g > 0:
                     self.g_hat = g
                 if self.single_class:
                     self.g_hat_c = E.g_hat_per_class(
-                        dev_grads, alphas,
+                        None, alphas,
                         self.device_class[avail_idx][up],
                         prep.p_sampled[up], self.global_dist,
-                        self.num_classes)
+                        self.num_classes, norms=norms[up])
             except (ValueError, FloatingPointError, ZeroDivisionError):
                 g_errs += 1
                 self.g_refresh_errors += 1
@@ -510,21 +528,45 @@ class FederatedTrainer:
         self.history.append(rec)
         return rec
 
+    def _finalize_round(self, j: int, prep: RoundPrep, sched: S.Schedule,
+                        st: UploadState, dev_params, deltas,
+                        dev_losses: np.ndarray) -> Dict:
+        """Eq. 2 aggregation over the uploads that landed + the Eq. 12
+        deviation norms in ONE fused dispatch (cell axis of 1), then the
+        host half (G refresh, degradation, round record)."""
+        dev_up, deltas_eff = self._apply_mods(dev_params, deltas, st)
+        w = self._finalize_weights(st.upload)
+        active = bool(st.upload.any())
+        newp_c, norms_c = self._finalize_core(
+            jax.tree.map(lambda x: x[None], self.params),
+            jax.tree.map(lambda x: x[None], dev_up),
+            jax.tree.map(lambda x: x[None], deltas_eff),
+            w[None], np.array([active]))
+        self.params = jax.tree.map(lambda x: x[0], newp_c)
+        norms = None
+        if active:       # the only device->host pull of finalize
+            norms = jax.device_get(norms_c)[0]
+            self.last_round_host_syncs += 1
+        return self._finalize_host(j, prep, sched, st, norms, dev_losses)
+
     # ------------------------------------------------------------------
     def run_round(self, j: int) -> Dict:
         prep = self._prepare_round(j)
         self.last_round_host_syncs = 0
 
-        # fused round core: local update + sigma + deltas + norms in one
-        # XLA program (cell axis of 1), one host sync for all of it
-        dev_params_c, losses_c, sigma_c, deltas_c, norms_c = \
+        # fused round core: local update + sigma + deltas + norms +
+        # NaN/Inf flags in one XLA program (cell axis of 1), one host
+        # sync for all of it
+        dev_params_c, losses_c, sigma_c, deltas_c, norms_c, fin_c = \
             self._round_core(
                 jax.tree.map(lambda x: x[None], self.params),
                 jax.tree.map(lambda x: x[None], prep.batches),
                 jnp.stack([prep.subkey]))
+        lh, sh, nh, fh = jax.device_get((losses_c, sigma_c, norms_c,
+                                         fin_c))
         dev_losses, sigma_v, delta_norms = (
-            np.asarray(x[0], dtype=np.float64)
-            for x in jax.device_get((losses_c, sigma_c, norms_c)))
+            np.asarray(x[0], dtype=np.float64) for x in (lh, sh, nh))
+        finite = np.asarray(fh[0])
         self.last_round_host_syncs += 1
         dev_params = jax.tree.map(lambda x: x[0], dev_params_c)
         deltas = jax.tree.map(lambda x: x[0], deltas_c)
@@ -534,13 +576,15 @@ class FederatedTrainer:
         sched = self._schedule(prob, prep.avail_idx, prep.gains,
                                delta_norms, j)
 
-        st = self._upload_phase(j, prep, sched, deltas, delta_norms)
+        st = self._upload_phase(j, prep, sched, deltas, delta_norms,
+                                finite=finite)
         if self._wants_backfill(st, sched):
             prob_bf = self._backfill_problem(prob, sched, st, prep)
             if prob_bf is not None:
                 bf = self._schedule(prob_bf, prep.avail_idx,
                                     st.upload_gains, delta_norms, j)
-                self._apply_backfill(bf, st, prep, deltas, delta_norms)
+                self._apply_backfill(bf, st, prep, deltas, delta_norms,
+                                     finite=finite)
         return self._finalize_round(j, prep, sched, st, dev_params,
                                     deltas, dev_losses)
 

@@ -14,6 +14,7 @@ Default parameters are the paper's Table I.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -63,18 +64,64 @@ class CellState:
     d2d: np.ndarray              # [V]
     d3d: np.ndarray              # [V]
 
-    def draw_gains(self, rng: np.random.Generator) -> np.ndarray:
-        """Average channel gain H_v for one round (linear, power)."""
+    def invariants(self):
+        """Round-invariant channel quantities (cached): the per-device
+        LOS probability and both path-loss branches.  Positions are
+        fixed for a cell's lifetime, so only the LOS coin flip and the
+        shadow draw vary per round."""
+        inv = getattr(self, "_invariants", None)
+        if inv is None:
+            p = self.params
+            inv = (los_probability(self.d2d),
+                   path_loss_db(self.d3d, p.carrier_ghz,
+                                np.ones(len(self.d3d), bool)),
+                   path_loss_db(self.d3d, p.carrier_ghz,
+                                np.zeros(len(self.d3d), bool)))
+            self._invariants = inv
+        return inv
+
+    def draw_shadowed_loss_db(self, rng: np.random.Generator) -> np.ndarray:
+        """One round's raw RNG pass: LOS coin flip + shadow draw, folded
+        with the cached path loss into PL + X_shadow (dB).  Kept separate
+        from the dB->linear conversion so a multi-cell driver can batch
+        that last pass over a stacked [C, V] array."""
+        p_los, pl_los, pl_nlos = self.invariants()
         p = self.params
-        los = rng.random(len(self.d2d)) < los_probability(self.d2d)
-        pl = path_loss_db(self.d3d, p.carrier_ghz, los)
+        los = rng.random(len(self.d2d)) < p_los
+        pl = np.where(los, pl_los, pl_nlos)
         shadow_std = np.where(los, p.shadow_std_los_db, p.shadow_std_nlos_db)
         shadow = rng.normal(0.0, shadow_std)
-        return 10 ** (-(pl + shadow) / 10.0)
+        return pl + shadow
+
+    def draw_gains(self, rng: np.random.Generator) -> np.ndarray:
+        """Average channel gain H_v for one round (linear, power)."""
+        return 10 ** (-self.draw_shadowed_loss_db(rng) / 10.0)
 
     def received_power(self, gains: np.ndarray) -> np.ndarray:
         """S * H_v in W — feeds core.bandwidth.min_bandwidth."""
         return self.params.tx_power_w * gains
+
+
+def draw_gains_batch(cells: Sequence[CellState],
+                     rngs: Sequence[np.random.Generator]) -> np.ndarray:
+    """Channel gains for C cells in one vectorized pass: [C, V].
+
+    Each cell's raw draws (LOS coin flip, shadow fade) still come from
+    its own generator in the exact order ``draw_gains`` consumes them —
+    a cell's stream is bitwise-identical to a standalone draw — but the
+    dB->linear conversion runs once over the stacked [C, V] array
+    instead of C times over [V] slices (elementwise, so the values are
+    unchanged)."""
+    loss_db = np.stack([cell.draw_shadowed_loss_db(rng)
+                        for cell, rng in zip(cells, rngs)])
+    return 10 ** (-loss_db / 10.0)
+
+
+def received_power_batch(cells: Sequence[CellState],
+                         gains: np.ndarray) -> np.ndarray:
+    """S * H for a [C, V] gain stack (per-cell tx power broadcast)."""
+    tx = np.array([cell.params.tx_power_w for cell in cells])
+    return tx[:, None] * np.asarray(gains)
 
 
 def apply_shadow_db(gains: np.ndarray, shadow_db: np.ndarray) -> np.ndarray:

@@ -9,8 +9,10 @@ Key contracts:
     cell axis is rolled (lax.map) on CPU, so the compiled body IS the
     single-cell program;
   * exactly one solve_many dispatch per fault-free round;
-  * the fused round makes <= 3 host syncs between local update and
-    aggregation (2 on a fault-free round);
+  * the WHOLE C-cell round makes <= 3 device->host syncs (2 fault-free:
+    core pull + finalize norms), independent of C;
+  * the accelerator cell axis (vmap) matches the CPU scan axis to f32
+    tolerance for both the round core and the finalize core;
   * C=8 is >= 3x faster per aggregation step than 8 sequential
     FederatedTrainer.run_round calls, measured as the wall-clock of a
     from-scratch experiment (construction + compile + rounds — what
@@ -143,6 +145,61 @@ def test_host_sync_budget(micro_world):
     assert ref.last_round_host_syncs <= 3
 
 
+def test_trainer_host_syncs_constant_in_c(micro_world):
+    """The batched phase engine's core contract: the WHOLE C-cell round
+    makes <= 3 device->host syncs (2 fault-free: core pull + finalize
+    norms), and the count does not grow with C."""
+    model, train, test, parts = micro_world
+    syncs = {}
+    for C in (2, 4):
+        mc = MultiCellTrainer(model, train, test, parts,
+                              micro_cfg(cells=C))
+        mc.run(2)
+        assert mc.last_round_host_syncs <= 3
+        syncs[C] = mc.last_round_host_syncs
+    assert syncs[2] == syncs[4]
+
+
+def test_vmap_scan_cell_axis_parity(micro_world):
+    """The accelerator path (cell_axis="vmap") must agree with the CPU
+    scan path to f32 tolerance — runnable on CPU, no accelerator needed
+    (vmap lowers to batched ops everywhere; only the numerics can
+    drift, by reassociated f32 reductions)."""
+    import jax.numpy as jnp
+    from repro.fl.client import make_round_core
+    from repro.fl.server import make_finalize_core
+    model, train, test, parts = micro_world
+    tr = FederatedTrainer(model, train, test, parts, micro_cfg())
+    prep = tr._prepare_round(0)
+    p2 = jax.tree.map(lambda x: jnp.stack([x, x]), tr.params)
+    b2 = jax.tree.map(lambda x: jnp.stack([x, x]), prep.batches)
+    k2 = jnp.stack([prep.subkey, prep.subkey])
+    outs = {}
+    for axis in ("scan", "vmap"):
+        core = make_round_core(tr._loss, tr._sigma_one, tr.cfg.eta,
+                               tr.cfg.tau, cell_axis=axis)
+        outs[axis] = core(p2, b2, k2)
+    for a, b in zip(jax.tree.leaves(outs["scan"]),
+                    jax.tree.leaves(outs["vmap"])):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64),
+                                   rtol=2e-5, atol=2e-6)
+
+    dev_params_c, _, _, deltas_c, _, _ = outs["scan"]
+    V = jax.tree.leaves(deltas_c)[0].shape[1]
+    w2 = np.full((2, V), 1.0 / V, np.float32)
+    act2 = np.ones(2, bool)
+    fouts = {}
+    for axis in ("scan", "vmap"):
+        fin = make_finalize_core(tr.cfg.tau, tr.cfg.eta, cell_axis=axis)
+        fouts[axis] = fin(p2, dev_params_c, deltas_c, w2, act2)
+    for a, b in zip(jax.tree.leaves(fouts["scan"]),
+                    jax.tree.leaves(fouts["vmap"])):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64),
+                                   rtol=2e-5, atol=2e-6)
+
+
 def test_rejects_unbatchable_scheduler(micro_world):
     model, train, test, parts = micro_world
     with pytest.raises(ValueError, match="batched scheduler"):
@@ -200,3 +257,35 @@ def test_c8_multicell_3x_faster(micro_world):
         f"multicell C={C}: {t_mc / R * 1e3:.0f} ms/step vs sequential "
         f"{t_seq / R * 1e3:.0f} ms/step "
         f"({t_seq / t_mc:.2f}x, expected >= 3x)")
+
+
+def test_c8_steady_state_speedup(micro_world):
+    """Once everything is compiled, a C=8 aggregation step must still be
+    >= 1.6x faster than 8 sequential standalone rounds — the marginal
+    round cost, where the batched phase engine's constant host syncs and
+    single dispatches per phase are the entire difference (no compile
+    amortization in either arm)."""
+    model, train, test, parts = micro_world
+    C, R = 8, 6
+    mc = MultiCellTrainer(model, train, test, parts, micro_cfg(cells=C))
+    seq = [FederatedTrainer(model, train, test, parts, micro_cfg(seed=c))
+           for c in range(C)]
+    for j in range(2):          # compile + warm both arms
+        mc.run_round(j)
+        for tr in seq:
+            tr.run_round(j)
+
+    t0 = time.perf_counter()
+    for j in range(2, 2 + R):
+        mc.run_round(j)
+    t_mc = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for j in range(2, 2 + R):
+        for tr in seq:
+            tr.run_round(j)
+    t_seq = time.perf_counter() - t0
+
+    assert t_seq >= 1.6 * t_mc, (
+        f"steady C={C}: {t_mc / R * 1e3:.0f} ms/step vs sequential "
+        f"{t_seq / R * 1e3:.0f} ms/step "
+        f"({t_seq / t_mc:.2f}x, expected >= 1.6x)")
