@@ -182,6 +182,42 @@ def run():
     yield row("legacy_core", us_legacy,
               f"fusion_speedup={us_legacy / us_fused:.2f}x")
 
+    # per-phase breakdown through repro.obs: warmup rounds pay (and
+    # count) the compiles, the registry then resets in place so the
+    # span histograms hold steady-state rounds only
+    import dataclasses
+    from repro.obs import ObsConfig
+    C_obs = cells_sweep[-1]
+    mco = MultiCellTrainer(
+        model, train, test, parts,
+        dataclasses.replace(_fl_cfg(V, cells=C_obs),
+                            obs=ObsConfig(enabled=True)))
+    for j in range(rounds):
+        mco.run_round(j)
+    m = mco.obs.metrics
+    results["compile"] = {
+        "count": int(m.counter("xla.compiles_total").value),
+        "seconds": m.counter("xla.compile_seconds_total").value,
+    }
+    m.reset()
+    for j in range(rounds, rounds + steady_rounds):
+        mco.run_round(j)
+    results["phase_us"] = {
+        name[len("span."):]: {
+            "count": h.count,
+            "mean_us": h.mean * 1e6,
+            "p50_us": h.percentile(0.5) * 1e6,
+            "p95_us": h.percentile(0.95) * 1e6,
+        }
+        for name, h in sorted(m.histograms.items())
+        if name.startswith("span.") and h.count}
+    results["phase_cells"] = C_obs
+    for name, p in results["phase_us"].items():
+        yield row(f"phase_{name}_C{C_obs}", p["mean_us"],
+                  f"p95={p['p95_us']:.0f}us")
+    yield row("compile_seconds", results["compile"]["seconds"] * 1e6,
+              f"compiles={results['compile']['count']}")
+
     path = os.environ.get("BENCH_MULTICELL_JSON", "BENCH_multicell.json")
     with open(path, "w") as f:
         json.dump(results, f, indent=2)

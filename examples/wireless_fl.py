@@ -22,6 +22,14 @@ the batched multi-cell engine (one fused local-update program + one
 ``solve_many`` scheduling dispatch per round; FedCGD schedulers only):
 
   PYTHONPATH=src python examples/wireless_fl.py --cells 4 --rounds 20
+
+``--metrics-out PATH.jsonl`` turns on the observability layer
+(``repro.obs``): per-round phase-timing records stream to the JSONL
+file and an end-of-run console summary reports p50/p95 phase times and
+failure-cause totals:
+
+  PYTHONPATH=src python examples/wireless_fl.py --lossy \
+      --metrics-out metrics.jsonl --rounds 10
 """
 import argparse
 
@@ -66,6 +74,9 @@ def main():
     ap.add_argument("--corrupt-prob", type=float, default=None)
     ap.add_argument("--reshadow-std-db", type=float, default=None)
     ap.add_argument("--clip-delta-norm", type=float, default=None)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH.jsonl",
+                    help="enable repro.obs and stream per-round metric "
+                         "records to this JSONL file")
     args = ap.parse_args()
 
     ds = synthetic_image_dataset(num_classes=args.classes, num_per_class=120,
@@ -102,14 +113,19 @@ def main():
         import dataclasses
         faults = dataclasses.replace(faults, **overrides)
 
+    from repro.obs import ObsConfig
+    obs_cfg = ObsConfig(enabled=args.metrics_out is not None,
+                        jsonl_path=args.metrics_out)
     fl = FLConfig(num_devices=args.devices,
                   available_prob=args.available_prob, batch_size=16,
                   tau=args.tau, scheduler=args.scheduler,
                   scheduler_backend=args.backend, eval_every=5,
-                  seed=args.seed, num_cells=args.cells, faults=faults)
+                  seed=args.seed, num_cells=args.cells, faults=faults,
+                  obs=obs_cfg)
     if args.cells > 1:
         mc = MultiCellTrainer(model, train, test, parts, fl)
         mc.run(args.rounds, verbose=True)
+        engine = mc
         trainer = mc.cells[0]           # report cell 0 below
         hist = trainer.history
         print(f"\n(multi-cell: {args.cells} cells, "
@@ -117,6 +133,7 @@ def main():
               f"{args.rounds} rounds; reporting cell 0)")
     else:
         trainer = FederatedTrainer(model, train, test, parts, fl)
+        engine = trainer
         hist = trainer.run(args.rounds, verbose=True)
 
     accs = [h["test_accuracy"] for h in hist if "test_accuracy" in h]
@@ -146,6 +163,13 @@ def main():
               f"(clipped {sum(h['num_clipped'] for h in hist)})")
         print(f"zero-upload rounds: "
               f"{sum(1 for h in hist if h['num_uploaded'] == 0)}")
+
+    if engine.obs.enabled:
+        from repro.obs import format_summary
+        engine.obs.close()
+        print("\n== observability summary ==")
+        print(format_summary(engine.obs.metrics))
+        print(f"metrics written to {args.metrics_out}")
 
 
 if __name__ == "__main__":

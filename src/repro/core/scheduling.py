@@ -250,7 +250,7 @@ SOLVE_MANY_ALGORITHMS = ("gs", "fscd", "cd")
 
 def solve_many(problems: Sequence[Problem], algorithm: str = "fscd",
                backend: str = "jax", max_inner: int = 200,
-               pallas: Optional[bool] = None) -> List[Schedule]:
+               pallas: Optional[bool] = None, obs=None) -> List[Schedule]:
     """Solve a batch of same-shaped Problems.
 
     ``backend="numpy"`` loops the reference per-problem solvers;
@@ -262,6 +262,11 @@ def solve_many(problems: Sequence[Problem], algorithm: str = "fscd",
     Pallas ``wemd_swap`` / ``wemd_add`` kernels (None = auto: only on a
     TPU backend).  Scheduling decisions still go through the exact-f64
     top-K re-evaluation, so masks stay bitwise-equal to numpy.
+
+    ``obs`` is a ``repro.obs.Obs`` facade: when enabled, the dispatch
+    runs under a ``solve_many.<backend>`` span and updates per-backend
+    call + iteration counters (None = the process-wide default, which
+    is off unless ``repro.obs.enable_default()`` armed it).
     """
     problems = list(problems)
     if algorithm not in SOLVE_MANY_ALGORITHMS:
@@ -269,6 +274,26 @@ def solve_many(problems: Sequence[Problem], algorithm: str = "fscd",
                          f"expected one of {SOLVE_MANY_ALGORITHMS}")
     if not problems:
         return []
+    if obs is None:
+        from repro.obs import DEFAULT as obs
+    if not obs.enabled:
+        return _solve_many_impl(problems, algorithm, backend, max_inner,
+                                pallas)
+    with obs.span(f"solve_many.{backend}", algorithm=algorithm,
+                  batch=len(problems)):
+        scheds = _solve_many_impl(problems, algorithm, backend,
+                                  max_inner, pallas)
+    m = obs.metrics
+    m.counter(f"sched.solve_many_calls.{backend}").inc()
+    m.counter("sched.problems_total").inc(len(problems))
+    m.counter("sched.iterations_total").inc(
+        sum(s.iterations for s in scheds))
+    return scheds
+
+
+def _solve_many_impl(problems: List[Problem], algorithm: str,
+                     backend: str, max_inner: int,
+                     pallas: Optional[bool]) -> List[Schedule]:
     if backend == "numpy" or algorithm == "cd":
         fn = {"gs": greedy_scheduling, "fscd": fscd,
               "cd": coordinate_descent}[algorithm]

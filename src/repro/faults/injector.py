@@ -47,14 +47,30 @@ class RoundFaults:
 
 
 class FaultInjector:
-    def __init__(self, cfg: FaultConfig, num_devices: int, base_seed: int):
+    def __init__(self, cfg: FaultConfig, num_devices: int, base_seed: int,
+                 obs=None):
         self.cfg = cfg
         self.num_devices = num_devices
         self.base_seed = base_seed
+        # optional repro.obs facade: injected-fault counters (set by the
+        # trainers; None or a disabled facade = no telemetry)
+        self.obs = obs
 
     @property
     def enabled(self) -> bool:
         return self.cfg.injection_enabled
+
+    def _count_injected(self, rf: "RoundFaults") -> None:
+        """Mirror one realisation into the metrics registry (host-side
+        numpy sums only — never on the obs-disabled path)."""
+        m = self.obs.metrics
+        m.counter("faults.rounds_drawn").inc()
+        for name, arr in (("dropout", rf.dropout),
+                          ("deadline", rf.deadline_miss),
+                          ("outage", rf.outage), ("corrupt", rf.corrupt)):
+            n = int(arr.sum())
+            if n:
+                m.counter(f"faults.injected.{name}").inc(n)
 
     def _raw_draw(self, round_idx: int):
         """One round's raw RNG arrays, in ``draw``'s exact consumption
@@ -81,7 +97,7 @@ class FaultInjector:
         cfg = self.cfg
         u_drop, u_dead, u_out, reshadow, u_cor, mode = \
             self._raw_draw(round_idx)
-        return RoundFaults(
+        rf = RoundFaults(
             dropout=u_drop < cfg.dropout_prob,
             deadline_miss=u_dead < cfg.deadline_miss_prob,
             outage=u_out < cfg.outage_prob,
@@ -89,6 +105,9 @@ class FaultInjector:
             corrupt=u_cor < cfg.corrupt_prob,
             corrupt_mode=mode,
         )
+        if self.obs is not None and self.obs.enabled:
+            self._count_injected(rf)
+        return rf
 
     @staticmethod
     def draw_many(injectors: Sequence["FaultInjector"],
@@ -124,10 +143,14 @@ class FaultInjector:
         dead = u[1] < prob[:, 1:2]
         out = u[2] < prob[:, 2:3]
         cor = u[4] < prob[:, 3:4]
-        return [RoundFaults(dropout=drop[c], deadline_miss=dead[c],
-                            outage=out[c], reshadow_db=u[3][c],
-                            corrupt=cor[c], corrupt_mode=u[5][c])
-                for c in range(C)]
+        rfs = [RoundFaults(dropout=drop[c], deadline_miss=dead[c],
+                           outage=out[c], reshadow_db=u[3][c],
+                           corrupt=cor[c], corrupt_mode=u[5][c])
+               for c in range(C)]
+        for inj, rf in zip(injectors, rfs):
+            if inj.enabled and inj.obs is not None and inj.obs.enabled:
+                inj._count_injected(rf)
+        return rfs
 
     # ------------------------------------------------------------------
     def upload_gains(self, gains: np.ndarray, rf: RoundFaults) -> np.ndarray:

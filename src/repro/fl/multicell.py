@@ -65,6 +65,8 @@ from repro.data.datasets import ArrayDataset
 from repro.faults.injector import FaultInjector
 from repro.fl.rounds import FederatedTrainer, FLConfig
 from repro.models.registry import Model
+from repro.obs import ObsConfig
+from repro.obs import from_config as obs_from_config
 from repro.wireless.channel import draw_gains_batch, received_power_batch
 
 # schedulers with a batched solve_many implementation
@@ -161,20 +163,30 @@ class MultiCellTrainer:
                  else [device_indices] * C)
 
         self.cfg = cfg
+        # the engine owns observability: cells are built silent (their
+        # ``obs`` is the no-op facade) so C cells never open C sinks,
+        # and the engine-level facade tags spans with the cell count
+        self.obs = obs_from_config(cfg.obs)
+        cell_cfg = dataclasses.replace(cfg, obs=ObsConfig())
         self.cells: List[FederatedTrainer] = [
             FederatedTrainer(model, train, test, parts[c],
-                             dataclasses.replace(cfg, seed=cell_seeds[c]))
+                             dataclasses.replace(cell_cfg,
+                                                 seed=cell_seeds[c]))
             for c in range(C)]
+        for cell in self.cells:
+            cell.faults.obs = self.obs     # injected-fault counters
         # every cell runs the same architecture: share cell 0's compiled
         # round core + finalize core so C=1 executes the exact programs
         # FederatedTrainer runs (bitwise parity) and C>1 reuses one
         # compilation (C standalone trainers would compile C copies)
-        self._core = self.cells[0]._round_core
+        self._core = self.obs.instrument_jit("round_core",
+                                             self.cells[0]._round_core)
         for cell in self.cells[1:]:
             cell._round_core = self.cells[0]._round_core
             cell._sigma_all = self.cells[0]._sigma_all
             cell._finalize_core = self.cells[0]._finalize_core
-        self._finalize_core = self.cells[0]._finalize_core
+        self._finalize_core = self.obs.instrument_jit(
+            "finalize_core", self.cells[0]._finalize_core)
         # params stay stacked [C, ...] across rounds (the round core and
         # finalize consume/produce the stack directly); cells get their
         # slices back through one jitted dispatch per round
@@ -199,7 +211,7 @@ class MultiCellTrainer:
         self.solve_many_calls += 1
         return S.solve_many(self._pad_cache.pad(probs), self._algorithm,
                             backend=cfg.scheduler_backend,
-                            pallas=cfg.scheduler_pallas)
+                            pallas=cfg.scheduler_pallas, obs=self.obs)
 
     def _apply_mods_batched(self, dev_params_c, deltas_c, states):
         """Scatter every cell's sanitizer replacements (clipped /
@@ -222,9 +234,20 @@ class MultiCellTrainer:
         return dev_params_c, deltas_c
 
     def run_round(self, j: int) -> List[Dict]:
+        obs = self.obs
+        with obs.span("round"):
+            recs = self._run_round_phases(j)
+        if obs.enabled:
+            self._emit_round_obs(j, recs)
+        return recs
+
+    def _run_round_phases(self, j: int) -> List[Dict]:
+        """One C-cell round, every phase under an engine-level ``obs``
+        span tagged with the cell count (no-op singletons when off)."""
         cells = self.cells
         C = len(cells)
         cfg = self.cfg
+        obs = self.obs
         self.last_round_host_syncs = 0
         for cell in cells:
             cell.last_round_host_syncs = 0
@@ -232,110 +255,158 @@ class MultiCellTrainer:
         # host-side prep: availability / channel / batch draws stay on
         # each cell's own RNG stream (bitwise-identical to standalone
         # cells), the channel math runs once over [C, V] stacks
-        avails = [cell._draw_avail() for cell in cells]
-        cell_states = [cell.cell for cell in cells]
-        gains_cv = draw_gains_batch(cell_states,
-                                    [cell.rng for cell in cells])
-        rx_cv = received_power_batch(cell_states, gains_cv)
-        noise = np.array([cs.params.noise_psd_w
-                          for cs in cell_states])[:, None]
-        bstar_cv = min_bandwidth(cells[0].payload, cfg.deadline_s,
-                                 rx_cv, noise)
-        preps = [cell._prep_from_channel(j, av, ai, gains_cv[c],
-                                         bstar_cv[c])
-                 for c, (cell, (av, ai)) in enumerate(zip(cells, avails))]
-        n_av = [len(p.avail_idx) for p in preps]
-        vmax = max(n_av)
+        with obs.span("prep", cells=C):
+            avails = [cell._draw_avail() for cell in cells]
+            cell_states = [cell.cell for cell in cells]
+            gains_cv = draw_gains_batch(cell_states,
+                                        [cell.rng for cell in cells])
+            rx_cv = received_power_batch(cell_states, gains_cv)
+            noise = np.array([cs.params.noise_psd_w
+                              for cs in cell_states])[:, None]
+            bstar_cv = min_bandwidth(cells[0].payload, cfg.deadline_s,
+                                     rx_cv, noise)
+            preps = [cell._prep_from_channel(j, av, ai, gains_cv[c],
+                                             bstar_cv[c])
+                     for c, (cell, (av, ai))
+                     in enumerate(zip(cells, avails))]
+            n_av = [len(p.avail_idx) for p in preps]
+            vmax = max(n_av)
 
         # ONE fused core dispatch: [C, Vmax, ...] local update + sigma +
         # deltas + norms + finite flags, then one host pull for every
         # scheduling input (params are already stacked — no per-round
         # re-stack)
-        batches_c = jax.tree.map(
-            lambda *xs: jnp.stack(xs),
-            *[_pad_batches(p.batches, vmax - n) for p, n in zip(preps,
-                                                                n_av)])
-        keys_c = jnp.stack([p.subkey for p in preps])
-        dev_params_c, losses_c, sigma_c, deltas_c, norms_c, fin_c = \
-            self._core(self._params_c, batches_c, keys_c)
-        lh, sh, nh, fh = jax.device_get((losses_c, sigma_c, norms_c,
-                                         fin_c))
-        self.last_round_host_syncs += 1
+        with obs.span("core", cells=C):
+            batches_c = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[_pad_batches(p.batches, vmax - n)
+                  for p, n in zip(preps, n_av)])
+            keys_c = jnp.stack([p.subkey for p in preps])
+            dev_params_c, losses_c, sigma_c, deltas_c, norms_c, fin_c = \
+                self._core(self._params_c, batches_c, keys_c)
+            lh, sh, nh, fh = jax.device_get((losses_c, sigma_c, norms_c,
+                                             fin_c))
+            self.last_round_host_syncs += 1
 
-        probs, losses64, norms64 = [], [], []
-        for c, (cell, prep, n) in enumerate(zip(cells, preps, n_av)):
-            dev_losses = np.asarray(lh[c, :n], dtype=np.float64)
-            losses64.append(dev_losses)
-            norms64.append(np.asarray(nh[c, :n], dtype=np.float64))
-            cell._post_core(prep, dev_losses,
-                            np.asarray(sh[c, :n], dtype=np.float64))
-            probs.append(cell._make_problem(prep))
+        with obs.span("schedule", cells=C):
+            probs, losses64, norms64 = [], [], []
+            for c, (cell, prep, n) in enumerate(zip(cells, preps, n_av)):
+                dev_losses = np.asarray(lh[c, :n], dtype=np.float64)
+                losses64.append(dev_losses)
+                norms64.append(np.asarray(nh[c, :n], dtype=np.float64))
+                cell._post_core(prep, dev_losses,
+                                np.asarray(sh[c, :n], dtype=np.float64))
+                probs.append(cell._make_problem(prep))
 
-        # ONE scheduling dispatch for all C cells (cached pad layout)
-        scheds = [_slice_schedule(s, n)
-                  for s, n in zip(self._solve_batch(probs), n_av)]
+            # ONE scheduling dispatch for all C cells (cached pad layout)
+            scheds = [_slice_schedule(s, n)
+                      for s, n in zip(self._solve_batch(probs), n_av)]
 
         # upload phase per cell: fault draws batched, NaN/Inf flags come
         # from the core (no sanitizer round-trips), per-cell delta
         # slices only materialized for fault-bearing configs
-        rfs = FaultInjector.draw_many([cell.faults for cell in cells], j)
-        need_deltas = (any(cell.faults.enabled for cell in cells)
-                       or cfg.faults.clip_delta_norm > 0)
-        deltas_cell = [None] * C
-        if need_deltas:
-            deltas_cell = [jax.tree.map(lambda x, c=c: x[c], deltas_c)
-                           for c in range(C)]
-        states, bf_idx, bf_probs = [], [], []
-        for c, (cell, prep, sched) in enumerate(zip(cells, preps, scheds)):
-            st = cell._upload_phase(j, prep, sched, deltas_cell[c],
-                                    norms64[c], finite=fh[c, :n_av[c]],
-                                    rf=rfs[c])
-            states.append(st)
-            if cell._wants_backfill(st, sched):
-                pb = cell._backfill_problem(probs[c], sched, st, prep)
-                if pb is not None:
-                    bf_idx.append(c)
-                    bf_probs.append(pb)
+        with obs.span("upload", cells=C):
+            rfs = FaultInjector.draw_many(
+                [cell.faults for cell in cells], j)
+            need_deltas = (any(cell.faults.enabled for cell in cells)
+                           or cfg.faults.clip_delta_norm > 0)
+            deltas_cell = [None] * C
+            if need_deltas:
+                deltas_cell = [jax.tree.map(lambda x, c=c: x[c], deltas_c)
+                               for c in range(C)]
+            states, bf_idx, bf_probs = [], [], []
+            for c, (cell, prep, sched) in enumerate(zip(cells, preps,
+                                                        scheds)):
+                st = cell._upload_phase(j, prep, sched, deltas_cell[c],
+                                        norms64[c],
+                                        finite=fh[c, :n_av[c]],
+                                        rf=rfs[c])
+                states.append(st)
+                if cell._wants_backfill(st, sched):
+                    pb = cell._backfill_problem(probs[c], sched, st, prep)
+                    if pb is not None:
+                        bf_idx.append(c)
+                        bf_probs.append(pb)
 
-        # at most one extra batched dispatch for the backfilling cells
-        if bf_probs:
-            for c, bf in zip(bf_idx, self._solve_batch(bf_probs)):
-                cells[c]._apply_backfill(
-                    _slice_schedule(bf, n_av[c]), states[c], preps[c],
-                    deltas_cell[c], norms64[c], finite=fh[c, :n_av[c]])
+            # at most one extra batched dispatch for the backfilling cells
+            if bf_probs:
+                for c, bf in zip(bf_idx, self._solve_batch(bf_probs)):
+                    cells[c]._apply_backfill(
+                        _slice_schedule(bf, n_av[c]), states[c], preps[c],
+                        deltas_cell[c], norms64[c],
+                        finite=fh[c, :n_av[c]])
 
         # ONE fused finalize dispatch: Eq. 2 over the [C, V] upload
         # weight matrix + Eq. 12 deviation norms; zero-upload cells keep
         # their previous params through the in-graph select
-        w_cv = np.zeros((C, vmax), np.float32)
-        active = np.zeros(C, bool)
-        for c, (cell, st) in enumerate(zip(cells, states)):
-            pad = vmax - n_av[c]
-            if pad:     # padded rows enter Eq. 2 with weight 0 and are
-                # never G-refreshed
-                st.upload = np.concatenate(
-                    [st.upload, np.zeros(pad, bool)])
-            w_cv[c] = cell._finalize_weights(st.upload)
-            active[c] = st.upload.any()
-        dev_params_c, deltas_c = self._apply_mods_batched(
-            dev_params_c, deltas_c, states)
-        newp_c, norms_fc = self._finalize_core(
-            self._params_c, dev_params_c, deltas_c, w_cv, active)
-        self._params_c = newp_c
-        cell_params = self._unstack_params(newp_c)
-        norms_h = jax.device_get(norms_fc)
-        self.last_round_host_syncs += 1
+        with obs.span("finalize", cells=C):
+            w_cv = np.zeros((C, vmax), np.float32)
+            active = np.zeros(C, bool)
+            for c, (cell, st) in enumerate(zip(cells, states)):
+                pad = vmax - n_av[c]
+                if pad:     # padded rows enter Eq. 2 with weight 0 and
+                    # are never G-refreshed
+                    st.upload = np.concatenate(
+                        [st.upload, np.zeros(pad, bool)])
+                w_cv[c] = cell._finalize_weights(st.upload)
+                active[c] = st.upload.any()
+            dev_params_c, deltas_c = self._apply_mods_batched(
+                dev_params_c, deltas_c, states)
+            newp_c, norms_fc = self._finalize_core(
+                self._params_c, dev_params_c, deltas_c, w_cv, active)
+            self._params_c = newp_c
+            cell_params = self._unstack_params(newp_c)
+            norms_h = jax.device_get(norms_fc)
+            self.last_round_host_syncs += 1
 
-        recs = []
-        for c, (cell, prep, sched, st) in enumerate(
-                zip(cells, preps, scheds, states)):
-            cell.params = cell_params[c]
-            recs.append(cell._finalize_host(j, prep, sched, st,
-                                            norms_h[c], losses64[c]))
+            recs = []
+            for c, (cell, prep, sched, st) in enumerate(
+                    zip(cells, preps, scheds, states)):
+                cell.params = cell_params[c]
+                recs.append(cell._finalize_host(j, prep, sched, st,
+                                                norms_h[c], losses64[c]))
         self.last_round_host_syncs += sum(
             cell.last_round_host_syncs for cell in cells)
         self.history.append(recs)
         return recs
+
+    def _emit_round_obs(self, j: int, recs: List[Dict]) -> None:
+        """Engine-level metrics + one ``multicell_round`` record (phase
+        breakdown, host syncs) and one per-cell round record.  The
+        host-sync contract (<= 3 fault-free, constant in C) is asserted
+        through ``fl.round.host_syncs`` in tests, not an ad-hoc int."""
+        m = self.obs.metrics
+        C = len(self.cells)
+        hs = self.last_round_host_syncs
+        m.counter("fl.rounds_total").inc()
+        m.counter("fl.host_syncs_total").inc(hs)
+        m.gauge("fl.round.host_syncs").set(hs)
+        m.gauge("fl.cells").set(C)
+        uploads = sum(r["num_uploaded"] for r in recs)
+        upload_bytes = uploads * self.cells[0].payload / 8.0
+        m.counter("fl.uploads_total").inc(uploads)
+        m.counter("fl.upload_bytes_total").inc(upload_bytes)
+        m.gauge("fl.round.upload_bytes").set(upload_bytes)
+        for rec in recs:
+            for cause, n in rec["failure_causes"].items():
+                if n:
+                    m.counter(f"fl.failures.{cause}").inc(n)
+        m.counter("fl.sanitized_total").inc(
+            sum(r["num_sanitized"] for r in recs))
+        m.counter("fl.clipped_total").inc(
+            sum(r["num_clipped"] for r in recs))
+        m.counter("fl.backfilled_total").inc(
+            sum(r["num_backfilled"] for r in recs))
+        m.counter("fl.g_refresh_errors_total").inc(
+            sum(r["g_refresh_errors_round"] for r in recs))
+        self.obs.round_record({
+            "kind": "multicell_round", "round": j, "cells": C,
+            "host_syncs": hs, "num_uploaded": uploads,
+            "upload_bytes": upload_bytes,
+            "solve_many_calls": self.solve_many_calls,
+        })
+        for c, rec in enumerate(recs):
+            self.obs.emit(dict(rec, kind="round", cell=c))
 
     # ------------------------------------------------------------------
     def run(self, num_rounds: int, verbose: bool = False) -> List[List[Dict]]:

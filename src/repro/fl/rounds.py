@@ -21,8 +21,9 @@ The fault model lives in ``repro.faults`` and is configured through
 ``FLConfig.faults``; with every probability at zero (the default) the
 loop reproduces the fault-free trainer bitwise.  Every round record
 carries failure telemetry (``num_failed``, ``failure_causes``,
-``num_backfilled``, ``num_sanitized``, ...), so the fault layer doubles
-as an observability layer.
+``num_backfilled``, ``num_sanitized``, ...), and the ``repro.obs``
+layer (``FLConfig.obs``, off by default) adds round-phase spans, a
+metrics registry and per-round record sinks on top of it.
 
 The round hot path is *fused*: one cell-batched XLA program
 (``repro.fl.client.make_round_core``) runs the local updates, the Eq. 10
@@ -62,11 +63,29 @@ from repro.fl.client import (make_local_update, make_round_core,
                              payload_bits, set_device, set_devices)
 from repro.fl.server import make_finalize_core
 from repro.models.registry import Model
+from repro.obs import ObsConfig
+from repro.obs import from_config as obs_from_config
 from repro.wireless.channel import CellState, make_cell
 
 
 @dataclasses.dataclass
 class FLConfig:
+    """One FL experiment (paper Table I + engine knobs).
+
+    ``obs`` configures the observability layer (``repro.obs``), off by
+    default — with ``ObsConfig(enabled=False)`` the trainer holds the
+    shared no-op facade and a fault-free round is bitwise-identical to
+    the uninstrumented trainer.  When enabled:
+
+      * ``obs.jsonl_path`` streams one JSON record per round (failure
+        telemetry + ``phases`` span breakdown + ``round_s``) to a file;
+      * ``obs.ring_size`` keeps the last N records in memory
+        (``trainer.obs.records()``);
+      * ``obs.console`` prints a one-line digest per round;
+      * span timings, host-sync counts, upload bytes, scheduler
+        iterations, failure causes and XLA compile counts/seconds land
+        in ``trainer.obs.metrics`` (names in ROADMAP.md Observability).
+    """
     num_devices: int = 64
     available_prob: float = 0.3
     batch_size: int = 32
@@ -90,6 +109,7 @@ class FLConfig:
     eval_every: int = 5
     ucb_beta: float = 0.05
     faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
 
 
 SCHEDULERS = ("fedcgd-fscd", "fedcgd-gs", "fedcgd-fscd-gc", "fedcgd-cd",
@@ -155,20 +175,29 @@ class FederatedTrainer:
         self.plays = np.zeros(cfg.num_devices)       # Fed-CBS counters
         self.cum_loss = np.zeros(cfg.num_devices)    # POC statistics
         self.history: List[Dict] = []
-        self.faults = FaultInjector(cfg.faults, cfg.num_devices, cfg.seed)
+        # observability facade (the shared no-op DISABLED when off)
+        self.obs = obs_from_config(cfg.obs)
+        self.faults = FaultInjector(cfg.faults, cfg.num_devices, cfg.seed,
+                                    obs=self.obs)
         self.g_refresh_errors = 0                    # cumulative Eq. 12 skips
+        self._obs_sched_iters = 0                    # last round, for obs
 
         self._local_update = make_local_update(self._loss, cfg.eta, cfg.tau)
-        self._round_core = make_round_core(self._loss, self._sigma_one,
-                                           cfg.eta, cfg.tau)
+        # instrument_jit is the identity when obs is disabled; enabled,
+        # it counts XLA compiles + compile seconds per core
+        self._round_core = self.obs.instrument_jit(
+            "round_core", make_round_core(self._loss, self._sigma_one,
+                                          cfg.eta, cfg.tau))
         self._sigma_all = jax.jit(jax.vmap(self._sigma_one,
                                            in_axes=(None, 0)))
         # fused finalize hot path: Eq. 2 weighted sum (the op order of
         # ``server.aggregate``) + the Eq. 12 centered-gradient norms in
         # ONE cell-batched dispatch (zero-upload cells keep their params
         # through an in-graph select)
-        self._finalize_core = make_finalize_core(cfg.tau, cfg.eta)
-        self._eval_batch = jax.jit(self._eval_fn)
+        self._finalize_core = self.obs.instrument_jit(
+            "finalize_core", make_finalize_core(cfg.tau, cfg.eta))
+        self._eval_batch = self.obs.instrument_jit(
+            "eval", jax.jit(self._eval_fn))
         self.last_round_host_syncs = 0       # device->host pulls between
         #   local update and aggregation (fused round contract: <= 3)
 
@@ -253,12 +282,14 @@ class FederatedTrainer:
         if name == "fedcgd-gs":
             if backend == "jax":
                 return S.solve_many([prob], "gs", backend="jax",
-                                    pallas=cfg.scheduler_pallas)[0]
+                                    pallas=cfg.scheduler_pallas,
+                                    obs=self.obs)[0]
             return S.greedy_scheduling(prob)
         if name in ("fedcgd-fscd", "fedcgd-fscd-gc"):
             if backend == "jax":
                 return S.solve_many([prob], "fscd", backend="jax",
-                                    pallas=cfg.scheduler_pallas)[0]
+                                    pallas=cfg.scheduler_pallas,
+                                    obs=self.obs)[0]
             return S.fscd(prob)
         if name == "fedcgd-cd":
             return S.coordinate_descent(prob, self.rng)
@@ -521,6 +552,11 @@ class FederatedTrainer:
             "num_sanitized": int(st.num_dropped_nf + st.num_clipped),
             "num_clipped": int(st.num_clipped),
             "num_infeasible": int((prep.bstar[avail_idx] < 0).sum()),
+            # THIS round's Eq. 12 refresh failures; the trainer
+            # attribute ``g_refresh_errors`` is the cumulative total.
+            "g_refresh_errors_round": int(g_errs),
+            # deprecated alias of g_refresh_errors_round (same value;
+            # kept one release for readers of the old ambiguous key)
             "g_refresh_errors": int(g_errs),
         }
         if cfg.eval_every and (j % cfg.eval_every == 0):
@@ -551,42 +587,91 @@ class FederatedTrainer:
 
     # ------------------------------------------------------------------
     def run_round(self, j: int) -> Dict:
-        prep = self._prepare_round(j)
+        obs = self.obs
+        with obs.span("round"):
+            rec = self._run_round_phases(j)
+        if obs.enabled:
+            self._emit_round_obs(rec)
+        return rec
+
+    def _run_round_phases(self, j: int) -> Dict:
+        """One round, each phase under an ``obs`` span (spans are the
+        no-op singleton when observability is off — the body is the
+        pre-instrumentation round loop, statement for statement)."""
+        obs = self.obs
+        with obs.span("prep"):
+            prep = self._prepare_round(j)
         self.last_round_host_syncs = 0
 
         # fused round core: local update + sigma + deltas + norms +
         # NaN/Inf flags in one XLA program (cell axis of 1), one host
         # sync for all of it
-        dev_params_c, losses_c, sigma_c, deltas_c, norms_c, fin_c = \
-            self._round_core(
-                jax.tree.map(lambda x: x[None], self.params),
-                jax.tree.map(lambda x: x[None], prep.batches),
-                jnp.stack([prep.subkey]))
-        lh, sh, nh, fh = jax.device_get((losses_c, sigma_c, norms_c,
-                                         fin_c))
-        dev_losses, sigma_v, delta_norms = (
-            np.asarray(x[0], dtype=np.float64) for x in (lh, sh, nh))
-        finite = np.asarray(fh[0])
-        self.last_round_host_syncs += 1
-        dev_params = jax.tree.map(lambda x: x[0], dev_params_c)
-        deltas = jax.tree.map(lambda x: x[0], deltas_c)
+        with obs.span("core"):
+            dev_params_c, losses_c, sigma_c, deltas_c, norms_c, fin_c = \
+                self._round_core(
+                    jax.tree.map(lambda x: x[None], self.params),
+                    jax.tree.map(lambda x: x[None], prep.batches),
+                    jnp.stack([prep.subkey]))
+            lh, sh, nh, fh = jax.device_get((losses_c, sigma_c, norms_c,
+                                             fin_c))
+            dev_losses, sigma_v, delta_norms = (
+                np.asarray(x[0], dtype=np.float64) for x in (lh, sh, nh))
+            finite = np.asarray(fh[0])
+            self.last_round_host_syncs += 1
+            dev_params = jax.tree.map(lambda x: x[0], dev_params_c)
+            deltas = jax.tree.map(lambda x: x[0], deltas_c)
 
-        self._post_core(prep, dev_losses, sigma_v)
-        prob = self._make_problem(prep)
-        sched = self._schedule(prob, prep.avail_idx, prep.gains,
-                               delta_norms, j)
+        with obs.span("schedule"):
+            self._post_core(prep, dev_losses, sigma_v)
+            prob = self._make_problem(prep)
+            sched = self._schedule(prob, prep.avail_idx, prep.gains,
+                                   delta_norms, j)
 
-        st = self._upload_phase(j, prep, sched, deltas, delta_norms,
-                                finite=finite)
-        if self._wants_backfill(st, sched):
-            prob_bf = self._backfill_problem(prob, sched, st, prep)
-            if prob_bf is not None:
-                bf = self._schedule(prob_bf, prep.avail_idx,
-                                    st.upload_gains, delta_norms, j)
-                self._apply_backfill(bf, st, prep, deltas, delta_norms,
-                                     finite=finite)
-        return self._finalize_round(j, prep, sched, st, dev_params,
-                                    deltas, dev_losses)
+        with obs.span("upload"):
+            st = self._upload_phase(j, prep, sched, deltas, delta_norms,
+                                    finite=finite)
+            if self._wants_backfill(st, sched):
+                prob_bf = self._backfill_problem(prob, sched, st, prep)
+                if prob_bf is not None:
+                    bf = self._schedule(prob_bf, prep.avail_idx,
+                                        st.upload_gains, delta_norms, j)
+                    self._apply_backfill(bf, st, prep, deltas,
+                                         delta_norms, finite=finite)
+        with obs.span("finalize"):
+            rec = self._finalize_round(j, prep, sched, st, dev_params,
+                                       deltas, dev_losses)
+        self._obs_sched_iters = int(sched.iterations)
+        return rec
+
+    def _emit_round_obs(self, rec: Dict) -> None:
+        """Mirror one round record into the metrics registry and the
+        sinks (host-side only — runs after the round's device work, so
+        it adds zero device->host syncs)."""
+        m = self.obs.metrics
+        m.counter("fl.rounds_total").inc()
+        hs = self.last_round_host_syncs
+        m.counter("fl.host_syncs_total").inc(hs)
+        m.gauge("fl.round.host_syncs").set(hs)
+        m.counter("fl.uploads_total").inc(rec["num_uploaded"])
+        upload_bytes = rec["num_uploaded"] * self.payload / 8.0
+        m.counter("fl.upload_bytes_total").inc(upload_bytes)
+        m.gauge("fl.round.upload_bytes").set(upload_bytes)
+        for cause, n in rec["failure_causes"].items():
+            if n:
+                m.counter(f"fl.failures.{cause}").inc(n)
+        m.counter("fl.sanitized_total").inc(rec["num_sanitized"])
+        m.counter("fl.clipped_total").inc(rec["num_clipped"])
+        m.counter("fl.backfilled_total").inc(rec["num_backfilled"])
+        m.counter("fl.g_refresh_errors_total").inc(
+            rec["g_refresh_errors_round"])
+        for g in ("sigma_hat", "g_hat", "wemd", "objective"):
+            m.gauge(f"fl.{g}").set(rec[g])
+        from repro.obs import COUNT_BUCKETS
+        m.histogram("sched.iterations", COUNT_BUCKETS).observe(
+            self._obs_sched_iters)
+        self.obs.round_record(dict(
+            rec, host_syncs=hs, upload_bytes=upload_bytes,
+            sched_iterations=self._obs_sched_iters))
 
     # ------------------------------------------------------------------
     def evaluate(self, max_batches: int = 20, batch_size: int = 256) -> float:

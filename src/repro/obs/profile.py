@@ -1,0 +1,37 @@
+"""``jax.profiler`` integration: capture a device trace of N rounds.
+
+``profile_rounds(trainer, n, outdir)`` works for both
+``FederatedTrainer`` and ``MultiCellTrainer`` (anything with
+``run_round(j)`` and a ``history`` list): it runs ``warmup`` rounds
+outside the trace so steady-state programs are what gets profiled, then
+records ``n`` rounds under ``jax.profiler.trace``.  The output
+directory can be opened with TensorBoard's profile plugin or Perfetto.
+"""
+from __future__ import annotations
+
+import os
+from typing import Union
+
+
+def profile_rounds(trainer, n: int, outdir: Union[str, os.PathLike],
+                   warmup: int = 1) -> str:
+    """Capture a ``jax.profiler`` trace of ``n`` steady-state rounds.
+
+    Rounds continue from the trainer's current position
+    (``len(trainer.history)``), so profiling composes with a run already
+    in flight.  Returns the trace directory."""
+    import jax
+
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    outdir = str(outdir)
+    os.makedirs(outdir, exist_ok=True)
+    j = len(trainer.history)
+    for _ in range(warmup):
+        trainer.run_round(j)
+        j += 1
+    with jax.profiler.trace(outdir):
+        for _ in range(n):
+            trainer.run_round(j)
+            j += 1
+    return outdir
